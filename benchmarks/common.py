@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: CSV emission + suites."""
+from __future__ import annotations
+
+import time
+
+from repro.core import graph
+
+# Paper Table 1 instance families that are generatable offline.  Exact PACE
+# protein/BN files are not redistributable (DESIGN.md §7); names refer to
+# the construction.  Tuples: (key, expected tw or None, heavy?)
+SUITE_FAST = [
+    ("myciel3", 5), ("myciel4", 10), ("queen5_5", 18), ("queen6_6", 25),
+    ("petersen", 4), ("desargues", 6),
+]
+SUITE_FULL = SUITE_FAST + [
+    ("mcgee", 7), ("queen7_7", 35), ("dyck", 7), ("grid6x6", 6),
+]
+
+
+def get_instance(key):
+    return graph.REGISTRY.get(key, lambda: None)() or {
+        "petersen": graph.petersen, "desargues": graph.desargues,
+    }[key]()
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """run.py contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,46 @@
+"""LM substrate microbenchmarks: reduced-config train & decode step wall
+time per architecture (CPU-hosted; relative costs only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, reduced
+from repro.models import Model
+from repro.train import step as step_lib
+
+from .common import Timer, emit
+
+
+def _front(cfg, batch):
+    out = {}
+    if cfg.frontend == "audio":
+        out["enc_embeds"] = jnp.zeros((batch, cfg.encoder_len, cfg.d_model))
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = jnp.zeros(
+            (batch, cfg.frontend_len, cfg.d_model))
+    return out
+
+
+def run(iters: int = 3):
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        model = Model(cfg)
+        tcfg = TrainConfig()
+        state = step_lib.init_state(model, jax.random.PRNGKey(0), tcfg)
+        fn = jax.jit(step_lib.build_train_step(model, tcfg))
+        toks = jnp.zeros((2, 32), jnp.int32)
+        batch = {"tokens": toks, "targets": toks,
+                 "mask": jnp.ones((2, 32), jnp.float32)}
+        batch.update(_front(cfg, 2))
+        state, _ = fn(state, batch)       # compile
+        with Timer() as t:
+            for _ in range(iters):
+                state, m = fn(state, batch)
+            jax.block_until_ready(m["loss"])
+        emit(f"lm/{arch}/train_step", t.seconds / iters,
+             f"params={model.n_params()}")
+
+
+if __name__ == "__main__":
+    run()

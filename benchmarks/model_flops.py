@@ -1,0 +1,112 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the 'useful work' reference.
+
+Conventions (stated so the roofline ratio is interpretable):
+  * matmul x@W costs 2*m*n*k flops;
+  * dense-train step = 3x forward (backward ~ 2x forward);
+  * attention forward = 4*B*S*T*H*hd (QK^T + PV), x0.5 when causal over the
+    full square (only the lower triangle is useful);
+  * MoE counts top_k routed experts + shared expert (active params);
+  * mamba state path = ~8 flops per (token, d_inner, d_state) element
+    (discretise, decay, update, readout);
+  * mLSTM = projections + intra-chunk C^2 attention + hd^2 state update per
+    chunk; sLSTM = 4 gate matmuls (d x d per-head block) per token.
+
+XLA's cost_analysis undercounts while-loop bodies (counted once, see
+EXPERIMENTS.md §Methodology), so MODEL_FLOPS here is the denominator-of-
+record for the compute roofline term.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model
+from repro.models.params import count_params, map_spec
+from repro.models import ssm as ssm_lib
+
+
+def _expert_params(cfg) -> int:
+    if cfg.moe is None:
+        return 0
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(1 for grp in cfg.block_pattern for k in grp
+                      if k == "moe") * cfg.n_reps
+    return n_moe_layers * m.n_experts * per_expert
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (dense count minus inactive experts)."""
+    total = count_params(Model(cfg).spec)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    inactive = _expert_params(cfg) * (1 - m.top_k / m.n_experts)
+    return int(total - inactive)
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for grp in cfg.block_pattern for k in grp
+               if k in ("attn", "hymba")) * cfg.n_reps
+
+
+def _ssm_layers(cfg, kind) -> int:
+    names = {"mamba": ("mamba", "hymba"), "mlstm": ("mlstm",),
+             "slstm": ("slstm",)}[kind]
+    return sum(1 for grp in cfg.block_pattern for k in grp
+               if k in names) * cfg.n_reps
+
+
+def forward_flops(cfg: ModelConfig, batch: int, seq: int,
+                  ctx: int | None = None, decode: bool = False) -> float:
+    """Forward flops for `batch` sequences of `seq` new tokens (ctx = KV
+    context length for decode)."""
+    t = batch * seq
+    n_act = active_params(cfg)
+    flops = 2.0 * n_act * t                      # all linear layers
+
+    la = _attn_layers(cfg)
+    h, hd = cfg.n_heads, cfg.hd
+    if decode:
+        kv_len = ctx if ctx is not None else seq
+        if cfg.sliding_window:
+            kv_len = min(kv_len, cfg.sliding_window)
+        flops += 4.0 * batch * seq * kv_len * h * hd * la
+    else:
+        kv = seq if cfg.sliding_window is None else min(seq,
+                                                        cfg.sliding_window)
+        flops += 0.5 * 4.0 * batch * seq * kv * h * hd * la
+    if cfg.cross_attention:
+        flops += 4.0 * batch * seq * cfg.encoder_len * h * hd * cfg.n_layers
+        # encoder self-attention (bidirectional, full square)
+        flops += 4.0 * batch * cfg.encoder_len ** 2 * h * hd \
+            * cfg.encoder_layers
+
+    if cfg.ssm is not None:
+        di, _, ds, _ = ssm_lib.mamba_dims(cfg)
+        lm = _ssm_layers(cfg, "mamba")
+        flops += 8.0 * t * di * ds * lm
+        lml = _ssm_layers(cfg, "mlstm")
+        if lml:
+            dim, hh, hdm = ssm_lib.mlstm_dims(cfg)
+            c = cfg.ssm.chunk if not decode else 1
+            flops += lml * (4.0 * t * c * dim          # intra-chunk attn
+                            + 4.0 * t * hdm * dim)     # state update/read
+        lsl = _ssm_layers(cfg, "slstm")
+        if lsl:
+            hd2 = cfg.d_model // cfg.n_heads
+            flops += lsl * t * cfg.n_heads * (2.0 * hd2 * 4 * hd2)
+    return flops
+
+
+def model_flops(arch_or_cfg, shape: ShapeConfig) -> float:
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) \
+        else get_config(arch_or_cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend == "vision":
+            s = s  # prefix embeds consume part of the budget; keep S total
+        return 3.0 * forward_flops(cfg, b, s)
+    if shape.kind == "prefill":
+        return forward_flops(cfg, b, s)
+    # decode: one new token against ctx = seq_len
+    return forward_flops(cfg, b, 1, ctx=s, decode=True)

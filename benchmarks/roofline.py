@@ -1,0 +1,155 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh):
+  compute term    = MODEL_FLOPS / (chips * 197e12 bf16 FLOP/s)
+  memory term     = HBM bytes moved / (chips * 819e9 B/s)
+  collective term = wire bytes / (chips * 50e9 B/s per ICI link)
+
+Sources: MODEL_FLOPS analytic (benchmarks/model_flops.py — cost_analysis
+undercounts loop bodies, see §Methodology in EXPERIMENTS.md); memory bytes
+from the loop-UNDER-counted cost_analysis 'bytes accessed' reported raw,
+plus an analytic floor (params + KV/state traffic); collective bytes from
+the loop-aware HLO parse (utils/hlo2.py), already per-device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.models import Model
+from repro.models.params import count_params
+
+from .model_flops import model_flops, active_params
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def _param_bytes(cfg) -> int:
+    return count_params(Model(cfg).spec) * 2      # bf16
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, n_devices: int) -> float:
+    """Per-device HBM floor: weights streamed once (+grad/opt traffic for
+    train), plus cache/activation traffic."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pb = _param_bytes(cfg)
+    act_bytes_per_tok = cfg.d_model * 2 * cfg.n_layers * 6   # rough
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                 else 1)
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write + opt read/write (fp32 m,v)
+        traffic = pb * 3 + count_params(Model(cfg).spec) * (4 * 4) \
+            + toks * act_bytes_per_tok * 2
+    elif shape.kind == "prefill":
+        traffic = pb + toks * act_bytes_per_tok \
+            + 2 * toks * cfg.n_kv * cfg.hd * 2 * cfg.n_layers
+    else:
+        kv_len = shape.seq_len if cfg.sliding_window is None else \
+            min(shape.seq_len, cfg.sliding_window)
+        if not cfg.sub_quadratic():
+            cache = (2 * shape.global_batch * kv_len * cfg.n_kv * cfg.hd
+                     * 2 * cfg.n_layers)
+        else:
+            cache = shape.global_batch * cfg.d_model * 64 * cfg.n_layers
+        traffic = pb * min(1.0, shape.global_batch) + cache
+    return traffic / n_devices
+
+
+def load_cells(artifact_dir: str = ARTIFACT_DIR):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        tag = os.path.basename(path)[:-5]
+        with open(path) as f:
+            cells[tag] = json.load(f)
+    return cells
+
+
+def roofline_row(tag: str, cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return {"tag": tag, "status": cell.get("status"),
+                "reason": cell.get("reason", cell.get("error", ""))[:110]}
+    parts = tag.split("__")
+    arch, shape_name, mesh = parts[0], parts[1], "__".join(parts[2:])
+    n_dev = cell["n_devices"]
+    mf = model_flops(arch, SHAPES[shape_name])
+    t_compute = mf / (n_dev * PEAK_FLOPS)
+
+    mem_cost = cell.get("bytes_accessed_per_device", 0.0)
+    mem_analytic = analytic_memory_bytes(arch, shape_name, n_dev)
+    mem_bytes = max(mem_cost, mem_analytic)
+    t_memory = mem_bytes / HBM_BW
+
+    wire = cell.get("collectives_scaled", {}).get("wire_bytes", 0.0)
+    t_coll = wire / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    hlo_flops = cell.get("flops_per_device", 0.0) * n_dev
+    return {
+        "tag": tag, "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": mesh, "n_devices": n_dev,
+        "model_flops": mf,
+        "hlo_flops_raw": hlo_flops,
+        "flops_ratio_raw": mf / hlo_flops if hlo_flops > 0 else float("nan"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_bound_s": total,
+        "roofline_fraction": t_compute / total if total > 0 else 0.0,
+        "mem_bytes_per_dev": mem_bytes,
+        "wire_bytes_per_dev": wire,
+    }
+
+
+LEVERS = {
+    "compute": "already compute-bound: raise MFU via larger per-core tiles "
+               "/ fewer recompute passes",
+    "memory": "cut HBM traffic: fuse/remat less, shrink optimizer state, "
+              "bf16 cache, better layout",
+    "collective": "cut wire bytes: reshard to kill the dominant gather/"
+                  "reduce, overlap collectives with compute, int8 grads",
+}
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | roofline frac | MODEL/HLOraw |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.2f} "
+            f"| {r['flops_ratio_raw']:.2f} |\n")
+    return "".join(out)
+
+
+def main():
+    cells = load_cells()
+    rows = [roofline_row(t, c) for t, c in cells.items()]
+    rows = [r for r in rows if r]
+    print("tag,t_compute,t_memory,t_collective,dominant,roofline_frac")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['tag']},{r.get('status')},{r.get('reason','')}")
+            continue
+        print(f"{r['tag']},{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
+              f"{r['t_collective_s']:.4e},{r['dominant']},"
+              f"{r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point: one section per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast suite
+    PYTHONPATH=src python -m benchmarks.run --full     # adds heavy graphs
+    PYTHONPATH=src python -m benchmarks.run --pallas   # adds kernel sweep
+
+Output contract: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    pallas = "--pallas" in sys.argv
+
+    print("# table1: general benchmark (paper Table 1)", flush=True)
+    from . import table1_general
+    table1_general.run(full=full)
+
+    print("# table2: work-size x memory sweep (paper Tables 2/3)",
+          flush=True)
+    from . import table2_worksize
+    table2_worksize.run(pallas=pallas)
+
+    print("# table4: minor-min-width on/off (paper Tables 4/5)", flush=True)
+    from . import table4_mmw
+    table4_mmw.run()
+
+    print("# table6: loop scheduling (paper Table 6)", flush=True)
+    from . import table6_unnesting
+    table6_unnesting.run()
+
+    print("# simplicial: beyond-paper pruning (paper §5 future work)",
+          flush=True)
+    from . import table_simplicial
+    table_simplicial.run()
+
+    print("# lm: substrate microbench", flush=True)
+    from . import lm_microbench
+    lm_microbench.run()
+
+    print("# roofline: dry-run derived terms (see EXPERIMENTS.md)",
+          flush=True)
+    try:
+        from . import roofline
+        roofline.main()
+    except Exception as e:                      # noqa: BLE001
+        print(f"roofline,0,unavailable ({e!r})")
+
+
+if __name__ == "__main__":
+    main()

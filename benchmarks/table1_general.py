@@ -1,0 +1,36 @@
+"""Table 1 analogue: general solver benchmark (time + states explored).
+
+Paper Table 1 reports |V|, tw, GPU/CPU time, and states expanded per
+instance.  The CPU-hosted JAX build plays the role of the paper's CPU
+baseline; the Pallas kernel path (interpret mode here, native on TPU) is
+also timed for reference.
+"""
+from __future__ import annotations
+
+from repro.core import solver
+
+from .common import SUITE_FAST, SUITE_FULL, Timer, emit, get_instance
+
+
+def run(full: bool = False, cap: int = 1 << 18, block: int = 1 << 10):
+    suite = SUITE_FULL if full else SUITE_FAST
+    rows = []
+    for key, want in suite:
+        g = get_instance(key)
+        with Timer() as t:
+            res = solver.solve(g, cap=cap, block=block)
+        ok = (want is None) or (res.width == want)
+        rows.append((key, g.n, res.width, res.exact, res.expanded,
+                     t.seconds, ok))
+        emit(f"table1/{key}", t.seconds,
+             f"n={g.n};tw={res.width};exact={res.exact};"
+             f"exp={res.expanded};expected_ok={ok}")
+        states_per_sec = res.expanded / max(t.seconds, 1e-9)
+        emit(f"table1/{key}/throughput", 1.0 / max(states_per_sec, 1e-9),
+             f"states_per_sec={states_per_sec:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,11 @@
+"""Serve a small model with continuous batching (more requests than slots).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve
+
+serve.main([
+    "--arch", "qwen3-0.6b", "--reduced",
+    "--requests", "12", "--slots", "4",
+    "--prompt-len", "16", "--max-new", "24", "--cache-len", "128",
+])

@@ -1,0 +1,30 @@
+"""End-to-end driver (the paper's workload): solve a benchmark suite and
+print a Table-1 style report.
+
+    PYTHONPATH=src python examples/solve_suite.py [--full]
+"""
+import sys
+import time
+
+from repro.core import graph, solver
+
+SUITE = [("myciel3", 5), ("petersen", 4), ("queen5_5", 18),
+         ("queen6_6", 25), ("myciel4", 10), ("desargues", 6)]
+if "--full" in sys.argv:
+    SUITE += [("mcgee", 7), ("dyck", 7), ("queen7_7", 35)]
+
+print(f"{'name':<12} {'|V|':>4} {'tw':>4} {'exact':>6} "
+      f"{'time(s)':>8} {'Exp':>10}")
+total_t, total_exp = 0.0, 0
+for key, want in SUITE:
+    g = graph.REGISTRY[key]()
+    t0 = time.time()
+    res = solver.solve(g, cap=1 << 18, block=1 << 10)
+    dt = time.time() - t0
+    total_t += dt
+    total_exp += res.expanded
+    flag = "" if res.width == want else f"  (expected {want}!)"
+    print(f"{key:<12} {g.n:>4} {res.width:>4} {str(res.exact):>6} "
+          f"{dt:>8.2f} {res.expanded:>10}{flag}")
+print(f"\ntotal: {total_t:.1f}s, {total_exp} states "
+      f"({total_exp / max(total_t, 1e-9):.0f} states/s)")

@@ -1,0 +1,19 @@
+"""Train a small qwen3-family model on synthetic data for a few hundred
+steps with checkpointing (CPU-runnable end-to-end training driver).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import sys
+
+from repro.launch import train
+
+steps = "300"
+if "--steps" in sys.argv:
+    steps = sys.argv[sys.argv.index("--steps") + 1]
+
+train.main([
+    "--arch", "qwen3-0.6b", "--reduced",
+    "--steps", steps, "--batch", "8", "--seq", "128",
+    "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_train_lm",
+    "--ckpt-every", "100", "--log-every", "20",
+])

@@ -1,0 +1,119 @@
+"""Packed-uint32 bitset algebra.
+
+All treewidth state in this framework is represented as packed bitsets:
+a set over a universe of ``n`` vertices is ``W = ceil(n/32)`` ``uint32``
+words.  Everything here is branch-free and vectorises onto the TPU VPU —
+this is the data-parallel replacement for the paper's per-thread stacks.
+
+Conventions:
+  * bit ``i`` lives in word ``i >> 5`` at position ``i & 31``.
+  * bits at positions ``>= n`` are always zero (maintained by construction).
+  * functions accept/return ``jnp.uint32`` arrays; shapes documented per fn.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def n_words(n: int) -> int:
+    """Number of uint32 words needed for an n-bit set."""
+    return (n + 31) // 32
+
+
+def zeros(n: int) -> jnp.ndarray:
+    return jnp.zeros((n_words(n),), dtype=U32)
+
+
+def full(n: int) -> jnp.ndarray:
+    """Bitset containing {0, ..., n-1}."""
+    w = n_words(n)
+    out = np.zeros((w,), dtype=np.uint32)
+    for i in range(n):
+        out[i >> 5] |= np.uint32(1) << np.uint32(i & 31)
+    return jnp.asarray(out)
+
+
+def onehot(i, w: int) -> jnp.ndarray:
+    """Bitset {i} with w words. ``i`` may be traced."""
+    i = jnp.asarray(i, dtype=jnp.int32)
+    words = jnp.arange(w, dtype=jnp.int32)
+    return jnp.where(words == (i >> 5), U32(1) << (i & 31).astype(U32), U32(0))
+
+
+def get_bit(words: jnp.ndarray, i) -> jnp.ndarray:
+    """Test bit i of a (..., W) bitset -> (...,) bool."""
+    i = jnp.asarray(i, dtype=jnp.int32)
+    word = jnp.take(words, i >> 5, axis=-1)
+    return ((word >> (i & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+
+
+def set_bit(words: jnp.ndarray, i) -> jnp.ndarray:
+    return words | onehot(i, words.shape[-1])
+
+
+def clear_bit(words: jnp.ndarray, i) -> jnp.ndarray:
+    return words & ~onehot(i, words.shape[-1])
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Population count over the trailing word axis: (..., W) -> (...,) int32."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32), axis=-1)
+
+
+def unpack(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(..., W) bitset -> (..., n) bool."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.take(words, idx >> 5, axis=-1)
+    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+
+
+def pack(bits: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(..., n) bool -> (..., W) bitset."""
+    w = n_words(n)
+    pad = w * 32 - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1)
+    b = bits.reshape(bits.shape[:-1] + (w, 32)).astype(U32)
+    shifts = (U32(1) << jnp.arange(32, dtype=U32))
+    return jnp.sum(b * shifts, axis=-1).astype(U32)
+
+
+def select_or(mask_bits: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """OR of the rows selected by a boolean mask.
+
+    mask_bits: (..., n) bool   rows: (n, W)  ->  (..., W)
+    This is one row of the OR-AND semiring "matmul"; it replaces the paper's
+    DFS neighbour expansion with a dense, divergence-free reduction.
+    """
+    sel = jnp.where(mask_bits[..., None], rows, U32(0))
+    return jax.lax.reduce(sel, U32(0), jax.lax.bitwise_or, (mask_bits.ndim - 1,))
+
+
+def or_matmul(mask_words: jnp.ndarray, rows: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Bit-matrix product in the OR-AND semiring.
+
+    mask_words: (m, W) packed masks;  rows: (n, W)  ->  (m, W) where
+    ``out[i] = OR_{j : bit j of mask_words[i]} rows[j]``.
+    """
+    bits = unpack(mask_words, n)          # (m, n)
+    return select_or(bits, rows)          # (m, W)
+
+
+def np_pack(sets, n: int) -> np.ndarray:
+    """Host-side helper: list of python sets / iterables -> (len, W) uint32."""
+    w = n_words(n)
+    out = np.zeros((len(sets), w), dtype=np.uint32)
+    for r, s in enumerate(sets):
+        for i in s:
+            out[r, i >> 5] |= np.uint32(1) << np.uint32(i & 31)
+    return out
+
+
+def np_unpack(words: np.ndarray, n: int) -> list:
+    """(W,) uint32 -> python set."""
+    return {i for i in range(n) if (int(words[i >> 5]) >> (i & 31)) & 1}

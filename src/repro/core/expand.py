@@ -1,0 +1,115 @@
+"""Wavefront expansion: one level of the Held-Karp treewidth DP.
+
+``expand_block`` is the data-parallel replacement of Listing 1 lines 5-22:
+for a block of states S it computes, for *every* candidate vertex v at once,
+``deg_S(v)`` and the child bitset ``S ∪ {v}``.  Pure-JAX path; the Pallas
+kernel in ``repro.kernels.expand`` computes the same function with explicit
+VMEM tiling and is validated against this module (and both against the
+python oracle in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bitset, components
+
+U32 = jnp.uint32
+
+
+@functools.partial(jax.jit, static_argnames=("n", "schedule", "impl"))
+def expand_block(adj: jnp.ndarray, states: jnp.ndarray, valid: jnp.ndarray,
+                 k: jnp.ndarray, allowed: jnp.ndarray, n: int,
+                 schedule: str = "doubling", impl: str = "jax"):
+    """Expand a block of states.
+
+    adj:     (n, W) packed adjacency
+    states:  (B, W) packed state bitsets
+    valid:   (B,)   bool
+    k:       scalar int32 — target treewidth
+    allowed: (W,)   candidate mask (complement of the max-clique skip set)
+    impl:    "jax" (vmap) or "pallas" (VMEM-tiled kernel; no reach output,
+             so incompatible with MMW pruning)
+
+    Returns (children (B, n, W), feasible (B, n) bool, degrees (B, n) int32,
+             reach (B, n, W) — per-state eliminated-graph adjacency, for MMW;
+             None under impl="pallas").
+    """
+    if impl == "pallas":
+        from repro.kernels.expand import expand_degrees
+        degrees = expand_degrees(adj, states, n=n)
+        reach = None
+    elif schedule == "matmul":
+        deg_fn = lambda s: components.eliminated_degrees_matmul(adj, s, n)
+        degrees, reach = jax.vmap(deg_fn)(states)
+    else:
+        deg_fn = lambda s: components.eliminated_degrees(adj, s, n,
+                                                         schedule=schedule)
+        degrees, reach = jax.vmap(deg_fn)(states)           # (B, n), (B, n, W)
+
+    in_s = bitset.unpack(states, n)                          # (B, n)
+    allowed_bits = bitset.unpack(allowed, n)                 # (n,)
+    feasible = ((degrees <= k)
+                & ~in_s
+                & allowed_bits[None, :]
+                & valid[:, None])
+
+    w = adj.shape[-1]
+    eye = components._eye_words(n, w)                        # (n, W)
+    children = states[:, None, :] | eye[None, :, :]          # (B, n, W)
+    return children, feasible, degrees, reach
+
+
+def simplicial_mask(adj, states, reach, feasible, n: int):
+    """Per (state, v): is v simplicial in the eliminated graph G_S?
+
+    The paper's §5 names simplicial-vertex detection as the open pruning
+    rule; this is its bit-parallel TPU form.  If a state has any feasible
+    simplicial candidate, eliminating it first is *safe* (a perfect-
+    elimination prefix exists), so all sibling branches can be pruned —
+    the caller collapses ``feasible`` to exactly one such v.
+
+    adj (n,W); states (B,W); reach (B,n,W); feasible (B,n) ->
+    (is_simplicial (B,n) bool).
+    """
+    w = adj.shape[-1]
+    eye = components._eye_words(n, w)
+    q = (reach & ~states[:, None, :]) & ~eye[None]           # (B,n,W) Q(S,v)
+    q_bits = bitset.unpack(q, n)                             # (B,n,n)
+    # u's eliminated-graph closed neighborhood: reach[u] | {u}
+    closed = reach | eye[None]                               # (B,n,W)
+    # violation[v] = exists u in Q_v with  Q_v \ closed(u) != {}
+    miss = q[:, :, None, :] & ~closed[:, None, :, :]         # (B,n,n,W)
+    nonzero = jnp.any(miss != 0, axis=-1)                    # (B,n,n)
+    viol = jnp.any(q_bits & nonzero, axis=-1)                # (B,n)
+    return feasible & ~viol
+
+
+def collapse_simplicial(feasible, simp):
+    """If any simplicial candidate exists, keep only the lowest-index one."""
+    has = jnp.any(simp, axis=-1, keepdims=True)              # (B,1)
+    n = feasible.shape[-1]
+    idx = jnp.argmax(simp, axis=-1)                          # first True
+    only = jax.nn.one_hot(idx, n, dtype=bool) & simp
+    return jnp.where(has, only, feasible)
+
+
+def degree_oracle(adj_bool, s: set, v: int) -> int:
+    """Host-side python oracle: |Q(S, v)| by explicit BFS (paper Listing 1)."""
+    n = len(adj_bool)
+    seen = [False] * n
+    stack = [v]
+    seen[v] = True
+    degree = 0
+    while stack:
+        u = stack.pop()
+        for wv in range(n):
+            if adj_bool[u][wv] and not seen[wv]:
+                seen[wv] = True
+                if wv in s:
+                    stack.append(wv)
+                else:
+                    degree += 1
+    return degree

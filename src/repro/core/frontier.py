@@ -1,0 +1,48 @@
+"""Fixed-capacity frontier buffers.
+
+The GPU implementation bounds its input/output lists at 180M states and
+discards overflow (marking the run inexact).  We keep exactly those
+semantics per device: a frontier is a fixed ``(cap, W)`` uint32 buffer, a
+count, and a drop counter.  Fixed shapes keep every level step jit-stable;
+capacity scales with the mesh in the distributed solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Frontier:
+    states: jnp.ndarray      # (cap, W) uint32
+    count: jnp.ndarray       # () int32
+    dropped: jnp.ndarray     # () int32 — overflow accumulator for this level
+
+    @property
+    def cap(self) -> int:
+        return self.states.shape[0]
+
+    @property
+    def w(self) -> int:
+        return self.states.shape[1]
+
+
+def empty_frontier(cap: int, w: int) -> Frontier:
+    """Frontier holding just the empty set (the DP root)."""
+    return Frontier(states=jnp.zeros((cap, w), dtype=jnp.uint32),
+                    count=jnp.asarray(1, dtype=jnp.int32),
+                    dropped=jnp.asarray(0, dtype=jnp.int32))
+
+
+def blank_frontier(cap: int, w: int) -> Frontier:
+    return Frontier(states=jnp.zeros((cap, w), dtype=jnp.uint32),
+                    count=jnp.asarray(0, dtype=jnp.int32),
+                    dropped=jnp.asarray(0, dtype=jnp.int32))
+
+
+def to_host(f: Frontier) -> np.ndarray:
+    """Materialise the live rows (for checkpointing / reconstruction)."""
+    c = int(f.count)
+    return np.asarray(f.states[:c])

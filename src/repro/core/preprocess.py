@@ -1,0 +1,160 @@
+"""Instance preprocessing (host-side, numpy).
+
+The paper preprocesses with the safe-separator rules of the authors'
+BZTreewidth PACE submission (split on components, articulation points/pairs/
+triplets, (almost-)clique separators).  We implement the first two levels —
+connected components and articulation points (biconnected blocks) — plus
+simplicial-vertex reduction; these are exactly safe (tw = max over parts).
+Articulation pairs/triplets and almost-clique separators are documented as
+out of scope (DESIGN.md §7): they need the full machinery of [5] and change
+results only by further shrinking instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from .graph import Graph
+
+
+def connected_components(g: Graph) -> list:
+    seen = np.zeros(g.n, dtype=bool)
+    comps = []
+    for s in range(g.n):
+        if seen[s]:
+            continue
+        stack, comp = [s], []
+        seen[s] = True
+        while stack:
+            v = stack.pop()
+            comp.append(v)
+            for u in np.nonzero(g.adj[v])[0]:
+                if not seen[u]:
+                    seen[u] = True
+                    stack.append(int(u))
+        comps.append(sorted(comp))
+    return comps
+
+
+def biconnected_blocks(g: Graph) -> list:
+    """Iterative Hopcroft-Tarjan; returns vertex sets of biconnected blocks.
+
+    tw(G) = max over blocks tw(G[block]) (articulation splits are safe)."""
+    n = g.n
+    num = [-1] * n
+    low = [0] * n
+    blocks = []
+    estack = []
+    cnt = [0]
+
+    for root in range(n):
+        if num[root] != -1:
+            continue
+        stack = [(root, -1, iter(np.nonzero(g.adj[root])[0]))]
+        num[root] = low[root] = cnt[0]
+        cnt[0] += 1
+        while stack:
+            v, parent, it = stack[-1]
+            advanced = False
+            for u in it:
+                u = int(u)
+                if num[u] == -1:
+                    estack.append((v, u))
+                    num[u] = low[u] = cnt[0]
+                    cnt[0] += 1
+                    stack.append((u, v, iter(np.nonzero(g.adj[u])[0])))
+                    advanced = True
+                    break
+                elif u != parent and num[u] < num[v]:
+                    estack.append((v, u))
+                    low[v] = min(low[v], num[u])
+            if advanced:
+                continue
+            stack.pop()
+            if stack:
+                pv = stack[-1][0]
+                low[pv] = min(low[pv], low[v])
+                if low[v] >= num[pv]:
+                    # pv is an articulation point (or root): pop a block
+                    block = set()
+                    while estack:
+                        a, b = estack[-1]
+                        if num[a] >= num[v]:
+                            estack.pop()
+                            block.update((a, b))
+                        else:
+                            break
+                    if estack and estack[-1] == (pv, v):
+                        estack.pop()
+                    block.update((pv, v))
+                    blocks.append(sorted(block))
+        if not blocks and n == 1:
+            blocks.append([root])
+    # isolated vertices form their own trivial blocks
+    covered = set()
+    for b in blocks:
+        covered.update(b)
+    for v in range(n):
+        if v not in covered:
+            blocks.append([v])
+    return blocks
+
+
+def simplicial_reduce(g: Graph) -> tuple:
+    """Repeatedly remove simplicial vertices (N(v) is a clique).
+
+    Safe: tw(G) = max(deg(v), tw(G - v)).  Returns (reduced graph,
+    lower bound from removed vertices, kept-vertex original ids)."""
+    adj = g.adj.copy()
+    alive = np.ones(g.n, dtype=bool)
+    lb = 0
+    changed = True
+    while changed:
+        changed = False
+        for v in range(g.n):
+            if not alive[v]:
+                continue
+            nbrs = np.nonzero(adj[v] & alive)[0]
+            d = len(nbrs)
+            if d == 0:
+                alive[v] = False
+                changed = True
+                continue
+            sub = adj[np.ix_(nbrs, nbrs)]
+            if d * (d - 1) == int(sub.sum()):   # clique
+                lb = max(lb, d)
+                adj[v, :] = False
+                adj[:, v] = False
+                alive[v] = False
+                changed = True
+    keep = np.nonzero(alive)[0]
+    if len(keep) == 0:
+        return Graph(0, np.zeros((0, 0), dtype=bool), g.name + "_red"), lb, keep
+    sub = Graph(len(keep), adj[np.ix_(keep, keep)], g.name + "_red")
+    return sub, lb, keep
+
+
+@dataclasses.dataclass
+class Preprocessed:
+    blocks: list          # list of Graph
+    lb: int               # lower bound established by reductions
+    original: Graph
+
+
+def preprocess(g: Graph, split_blocks: bool = True) -> Preprocessed:
+    """Full pipeline: simplicial reduce -> biconnected blocks -> reduce each."""
+    red, lb, _ = simplicial_reduce(g)
+    parts: list = []
+    if red.n:
+        if split_blocks:
+            for blk in biconnected_blocks(red):
+                if len(blk) >= 2:
+                    sub, lb2, _ = simplicial_reduce(red.subgraph(blk))
+                    lb = max(lb, lb2)
+                    if sub.n:
+                        parts.append(sub)
+        else:
+            parts.append(red)
+    # largest first: the hard block dominates runtime, fail fast
+    parts.sort(key=lambda s: -s.n)
+    return Preprocessed(parts, lb, g)

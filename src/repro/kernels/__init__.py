@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+expand/ — wavefront state expansion (Listing 1 inner loops)
+bloom/  — Bloom-filter dedup with sequential atomic-OR semantics (§3.2)
+"""

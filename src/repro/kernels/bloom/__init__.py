@@ -1,0 +1,2 @@
+from .ops import bloom_insert, make_filter_words
+from .ref import bloom_ref

@@ -1,0 +1,35 @@
+"""Pure-jnp/python oracle for the Bloom kernel.
+
+Sequential semantics: elements are inserted one at a time in row order, and
+``was_new[i]`` reflects the filter state after rows 0..i-1 — exactly what the
+paper's mutex-striped atomic OR guarantees for intra-batch duplicates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bloom as bloom_core
+
+
+def bloom_ref(filter_words: np.ndarray, states: np.ndarray,
+              valid: np.ndarray, m_bits: int, k_hashes: int):
+    """filter_words: (m_words,) uint32 (packed bits);  states: (B, W) uint32.
+
+    Returns (was_new (B,) bool, updated filter_words)."""
+    filt = filter_words.copy()
+    b = states.shape[0]
+    was_new = np.zeros((b,), dtype=bool)
+    for i in range(b):
+        if not valid[i]:
+            continue
+        h1 = bloom_core.murmur3_ref(states[i], int(bloom_core.SEED1))
+        h2 = bloom_core.murmur3_ref(states[i], int(bloom_core.SEED2))
+        any_zero = False
+        for j in range(k_hashes):
+            idx = (h1 + j * h2) % m_bits
+            word, bit = idx >> 5, idx & 31
+            if not (int(filt[word]) >> bit) & 1:
+                any_zero = True
+                filt[word] = np.uint32(int(filt[word]) | (1 << bit))
+        was_new[i] = any_zero
+    return was_new, filt

@@ -1,0 +1,2 @@
+from .ops import expand_degrees
+from .ref import expand_ref

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the expansion kernel.
+
+Computes, for a block of states, the eliminated-graph degree of every
+candidate vertex — identical math to ``repro.core.components`` (which is
+itself validated against the paper's DFS oracle in tests), expressed here
+standalone so the kernel test has a self-contained reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def _unpack(words, n):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.take(words, idx >> 5, axis=-1)
+    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+
+
+def _or_matmul(mask_words, rows, n):
+    bits = _unpack(mask_words, n)
+    sel = jnp.where(bits[..., None], rows, U32(0))
+    return jax.lax.reduce(sel, U32(0), jax.lax.bitwise_or, (bits.ndim - 1,))
+
+
+def _eye(n, w):
+    out = np.zeros((n, w), dtype=np.uint32)
+    idx = np.arange(n)
+    out[idx, idx >> 5] = np.uint32(1) << (idx & 31).astype(np.uint32)
+    return jnp.asarray(out)
+
+
+def _log2_ceil(n):
+    b = 1
+    while (1 << b) < n:
+        b += 1
+    return b
+
+
+def expand_ref(adj: jnp.ndarray, states: jnp.ndarray, n: int) -> jnp.ndarray:
+    """adj (n, W) uint32, states (B, W) uint32 -> degrees (B, n) int32."""
+    w = adj.shape[-1]
+    eye = _eye(n, w)
+
+    def one(s):
+        s_bits = _unpack(s, n)
+        z = jnp.where(s_bits[:, None], (adj & s[None, :]) | eye, U32(0))
+        for _ in range(_log2_ceil(max(n, 2))):
+            z = z | _or_matmul(z, z, n)
+        nb = _or_matmul(z, adj, n)
+        reach = adj | _or_matmul(adj & s[None, :], nb, n)
+        q = (reach & ~s[None, :]) & ~eye
+        return jnp.sum(jax.lax.population_count(q).astype(jnp.int32), axis=-1)
+
+    return jax.vmap(one)(states)

@@ -1,0 +1,2 @@
+from .ops import mmw_bounds
+from .ref import mmw_bounds_ref

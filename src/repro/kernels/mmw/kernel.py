@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: minor-min-width lower bound (paper §3.3).
+
+The GPU version tracks degrees + a disjoint-set forest and re-runs DFS over
+the original graph per contraction.  The TPU form keeps the per-state
+eliminated-graph adjacency (the reach matrix, already produced by the
+expansion kernel) as an (n, W) bitset tile in VMEM and performs each
+contraction as pure bitset algebra — column clear + column select + two row
+writes — with a **static trip count** of n-1 contraction steps and per-state
+done-masking instead of divergent early exit (the branch-divergence story of
+the paper's §4.5, resolved structurally).
+
+Grid: one step per state block; everything stays in VMEM
+(block x n x W uint32 ~ 64 KiB at n=64, W=2, block=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+BIG = 1 << 20          # python int: pallas kernels cannot capture arrays
+
+
+def _unpack(words, n):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.take(words, idx >> 5, axis=-1)
+    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+
+
+def _onehot_words(i, w):
+    # i: (...,) int32 -> (..., w) uint32 single-bit masks
+    words = jnp.arange(w, dtype=jnp.int32)
+    return jnp.where(words == (i[..., None] >> 5),
+                     U32(1) << (i[..., None] & 31).astype(U32), U32(0))
+
+
+def _eye_words(n, w):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, w), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, w), 1)
+    return jnp.where(cols == (rows >> 5),
+                     U32(1) << (rows & 31).astype(U32), U32(0))
+
+
+def _full_words(n, w):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)[0]
+    full = jnp.full((w,), U32(0xFFFFFFFF))
+    rem = n - 32 * (n // 32)
+    last = n // 32
+    mask = jnp.where(jnp.arange(w) < last, full,
+                     jnp.where(jnp.arange(w) == last,
+                               (U32(1) << U32(rem)) - U32(1) if rem else U32(0),
+                               U32(0)))
+    if n % 32 == 0:
+        mask = jnp.where(jnp.arange(w) < n // 32, full, U32(0))
+    del rows
+    return mask
+
+
+def _popcount(words):
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                   axis=-1)
+
+
+def _mmw_kernel(reach_ref, states_ref, k_ref, lb_ref, *, n: int):
+    reach = reach_ref[...]                    # (B, n, W)
+    states = states_ref[...]                  # (B, W)
+    kk = k_ref[0]
+    b, _, w = reach.shape
+    eye = _eye_words(n, w)
+    universe = _full_words(n, w)
+
+    active = universe[None, :] & ~states                     # (B, W)
+    act_bits = _unpack(active, n)                            # (B, n)
+    adjm = jnp.where(act_bits[..., None],
+                     (reach & active[:, None, :]) & ~eye[None], U32(0))
+    lb = jnp.zeros((b,), jnp.int32)
+    nact = _popcount(active)
+
+    def step(_, carry):
+        adjm, active, lb, nact = carry
+        act_bits = _unpack(active, n)                        # (B, n)
+        live = (nact > 1) & (lb <= kk)                       # done-masking
+        d = jnp.where(act_bits, _popcount(adjm), BIG)        # (B, n)
+        v = jnp.argmin(d, axis=-1).astype(jnp.int32)         # (B,)
+        dv = jnp.take_along_axis(d, v[:, None], axis=-1)[:, 0]
+        d2 = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, d.shape, 1) == v[:, None],
+            BIG, d)
+        second = jnp.min(d2, axis=-1)
+        lb_new = jnp.maximum(lb, jnp.where(nact >= 2,
+                                           jnp.minimum(second, BIG - 1), 0))
+        vrow = jnp.take_along_axis(
+            adjm, v[:, None, None].repeat(w, axis=-1), axis=1)[:, 0]
+        nb_bits = _unpack(vrow, n)
+        dn = jnp.where(nb_bits, d, BIG)
+        u = jnp.where(dv > 0, jnp.argmin(dn, axis=-1), v).astype(jnp.int32)
+        uhot = _onehot_words(u, w)                           # (B, W)
+        vhot = _onehot_words(v, w)
+        urow = jnp.take_along_axis(
+            adjm, u[:, None, None].repeat(w, axis=-1), axis=1)[:, 0]
+        merged = (vrow | urow) & active & ~uhot & ~vhot
+        merged_bits = _unpack(merged, n)                     # (B, n)
+        adjm2 = adjm & ~uhot[:, None, :]
+        adjm2 = jnp.where(merged_bits[..., None],
+                          adjm2 | vhot[:, None, :],
+                          adjm2 & ~vhot[:, None, :])
+        rowsel = jax.lax.broadcasted_iota(jnp.int32, (b, n), 1)
+        adjm2 = jnp.where((rowsel == v[:, None])[..., None],
+                          merged[:, None, :], adjm2)
+        adjm2 = jnp.where((rowsel == u[:, None])[..., None],
+                          U32(0), adjm2)
+        active2 = active & ~uhot
+
+        adjm = jnp.where(live[:, None, None], adjm2, adjm)
+        active = jnp.where(live[:, None], active2, active)
+        lb = jnp.where(live, lb_new, lb)
+        nact = jnp.where(live, nact - 1, nact)
+        return adjm, active, lb, nact
+
+    _, _, lb, _ = jax.lax.fori_loop(0, max(n - 1, 1), step,
+                                    (adjm, active, lb, nact))
+    lb_ref[...] = lb
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
+def mmw_bounds_pallas(reach, states, k, *, n: int, block: int = 64,
+                      interpret: bool = True):
+    """MMW lower bounds for a batch of states.
+
+    reach (B, n, W) uint32 eliminated-graph rows; states (B, W); k scalar.
+    B must be a multiple of block.  Returns (B,) int32 bounds (exceeding k
+    means prunable; values freeze once > k, matching core.mmw early exit).
+    """
+    bt, _, w = reach.shape
+    assert bt % block == 0
+    kernel = functools.partial(_mmw_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(bt // block,),
+        in_specs=[
+            pl.BlockSpec((block, n, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bt,), jnp.int32),
+        interpret=interpret,
+    )(reach, states, k)

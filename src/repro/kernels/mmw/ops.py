@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the MMW kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mmw_bounds_pallas
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
+def mmw_bounds(reach, states, k, *, n: int, block: int = 64,
+               interpret: bool | None = None):
+    """MMW lower bounds, padding the batch to the kernel block size."""
+    if interpret is None:
+        interpret = default_interpret()
+    b = reach.shape[0]
+    pad = (-b) % block
+    if pad:
+        reach = jnp.concatenate(
+            [reach, jnp.zeros((pad,) + reach.shape[1:], reach.dtype)])
+        states = jnp.concatenate(
+            [states, jnp.zeros((pad,) + states.shape[1:], states.dtype)])
+    k = jnp.asarray(k, jnp.int32)[None]
+    out = mmw_bounds_pallas(reach, states, k, n=n, block=block,
+                            interpret=interpret)
+    return out[:b]

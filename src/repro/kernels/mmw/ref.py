@@ -1,0 +1,12 @@
+"""Oracle for the MMW kernel: the validated core implementation, vmapped."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mmw as mmw_core
+
+
+def mmw_bounds_ref(reach, states, k, n: int):
+    return jax.vmap(lambda r, s: mmw_core.mmw_bound(r, s, k, n))(
+        reach, states)

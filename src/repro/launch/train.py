@@ -1,0 +1,111 @@
+"""Training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Resumes automatically from the newest checkpoint in --ckpt-dir; pair with
+launch/supervisor.py for restart-on-crash.  --crash-at-step N injects a
+failure for the fault-tolerance test.  Data is counter-based synthetic, so
+restarts replay the stream exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config, reduced
+from repro.data.synthetic import SyntheticLM
+from repro.models import Model
+from repro.train import step as step_lib
+from repro.train.checkpoint import CheckpointManager
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--crash-at-step", type=int, default=-1,
+                    help="fault injection for supervisor tests")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       total_steps=args.steps, microbatch=args.microbatch,
+                       optimizer=args.optimizer)
+    model = Model(cfg)
+    print(f"[train] {cfg.name}: {model.n_params()/1e6:.1f}M params",
+          flush=True)
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch, seed=tcfg.seed)
+    step_fn = jax.jit(step_lib.build_train_step(model, tcfg),
+                      donate_argnums=(0,))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        abstract = step_lib.abstract_state(model, tcfg)
+        state, start = mgr.restore(abstract)
+        print(f"[train] resumed from step {start}", flush=True)
+    else:
+        state = step_lib.init_state(model, jax.random.PRNGKey(tcfg.seed),
+                                    tcfg)
+
+    marker = (os.path.join(args.ckpt_dir, ".crash_injected")
+              if args.ckpt_dir else "")
+    t0 = time.time()
+    for step in range(start, args.steps):
+        if step == args.crash_at_step and not (
+                marker and os.path.exists(marker)):
+            # one-shot fault injection: mark so the restarted run proceeds
+            if marker:
+                with open(marker, "w") as f:
+                    f.write(str(step))
+            print(f"[train] injected crash at step {step}", flush=True)
+            raise SystemExit(17)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        front = _frontends(cfg, args.batch)
+        batch.update(front)
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step={step} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            mgr.save(state, step + 1)          # async
+    if mgr is not None:
+        mgr.save(state, args.steps, blocking=True)
+    print("[train] done", flush=True)
+    return state
+
+
+def _frontends(cfg, batch):
+    out = {}
+    if cfg.frontend == "audio":
+        out["enc_embeds"] = jnp.zeros((batch, cfg.encoder_len, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = jnp.zeros(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+if __name__ == "__main__":
+    main()

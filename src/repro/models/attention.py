@@ -1,0 +1,203 @@
+"""Attention: GQA + qk-norm + RoPE + sliding window + cross + KV-cache decode.
+
+Training / prefill attention is **doubly-chunked with an online softmax**
+(flash-attention schedule expressed in pure JAX): an outer ``lax.scan`` over
+query chunks and an inner scan over key/value chunks, fp32 accumulators.
+This bounds activation memory at O(Cq*Ck) per block instead of O(S^2) —
+required for the 32k-prefill shapes to fit HBM.
+
+GQA is computed with grouped einsums (no materialised head repetition):
+q is viewed as (B, S, K, G, hd) with H = K*G.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import Param
+from . import layers
+
+NEG = -1e30
+
+
+def attention_spec(cfg, cross: bool = False) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    if cross:
+        k = h                     # whisper cross-attention is MHA
+    spec = {
+        "wq": Param((d, h, hd), ("embed", "heads", None)),
+        "wk": Param((d, k, hd), ("embed", "kv", None)),
+        "wv": Param((d, k, hd), ("embed", "kv", None)),
+        "wo": Param((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = layers.rmsnorm_spec(hd)
+        spec["k_norm"] = layers.rmsnorm_spec(hd)
+    return spec
+
+
+def project_qkv(p, cfg, xq, xkv, positions_q, positions_kv, rope: bool = True):
+    """Returns q (B,Sq,H,hd), k/v (B,Skv,K,hd), rope+qk-norm applied."""
+    q = jnp.einsum("bsd,dhx->bshx", xq, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", xkv, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", xkv, p["wv"])
+    if "q_norm" in p:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        cos_q, sin_q = layers.rope_angles(positions_q, cfg.hd, cfg.rope_theta)
+        cos_k, sin_k = layers.rope_angles(positions_kv, cfg.hd, cfg.rope_theta)
+        q = layers.apply_rope(q, cos_q, sin_q)
+        k = layers.apply_rope(k, cos_k, sin_k)
+    return q, k, v
+
+
+def output_proj(p, ctx):
+    """ctx (B, S, H, hd) -> (B, S, d)."""
+    return jnp.einsum("bshx,hxd->bsd", ctx, p["wo"])
+
+
+# ----------------------------------------------------- chunked online softmax
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int,
+                      window: Optional[int] = None,
+                      q_offset=0, k_offset=0):
+    """q (B,Sq,H,hd), k/v (B,Skv,K,hd) -> (B,Sq,H,hd).
+
+    Double-chunked flash schedule; all-mask blocks still execute (static
+    trip counts — see EXPERIMENTS.md §Perf for the triangular-skip variant).
+    """
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    cq = min(chunk, sq)
+    ck = min(chunk, skv)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+    nq, nk = sq // cq, skv // ck
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, nq, cq, kh, g, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, nk, ck, kh, hd)
+    vc = v.reshape(b, nk, ck, kh, hd)
+
+    def q_block(_, qi_and_block):
+        qi, qb = qi_and_block                       # qb (B,cq,K,G,hd)
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_block(carry, kj_and_kv):
+            m, l, acc = carry
+            kj, kb, vb = kj_and_kv
+            kpos = k_offset + kj * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgx,bckx->bqkgc", qb,
+                           kb.astype(jnp.float32))
+            mask = jnp.ones((cq, ck), dtype=bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckx->bqkgx", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, cq, kh, g), NEG, jnp.float32),
+                jnp.zeros((b, cq, kh, g), jnp.float32),
+                jnp.zeros((b, cq, kh, g, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init,
+            (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out
+
+    _, blocks = jax.lax.scan(
+        q_block, None, (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    # blocks (nq, B, cq, K, G, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, sq, kh, g, hd)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                   q_offset=0, k_offset=0):
+    """Reference unchunked attention (short sequences / encoder / tests)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kh, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgx,bckx->bqkgc", qg, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(sq)
+    kpos = k_offset + jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckx->bqkgx", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- decode
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     window: Optional[int] = None):
+    """Single-token decode: q (B,1,H,hd); cache (B,Smax,K,hd); pos (B,).
+
+    Attends to cache positions <= pos (per slot), optional sliding window.
+    """
+    b, _, h, hd = q.shape
+    smax, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgx,bckx->bkgc", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(smax)
+    mask = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= (pos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckx->bkgx", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Write k/v_new (B,1,K,hd) at per-slot positions pos (B,)."""
+    def write(cache, new, p):
+        return jax.lax.dynamic_update_slice(cache, new, (p, 0, 0))
+    k_cache = jax.vmap(write)(k_cache, k_new, pos)
+    v_cache = jax.vmap(write)(v_cache, v_new, pos)
+    return k_cache, v_cache
+
+
+def update_window_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Ring-buffer write for sliding-window caches: slot = pos % window."""
+    win = k_cache.shape[1]
+    return update_cache(k_cache, v_cache, k_new, v_new, pos % win)
+
+
+def decode_window_attention(q, k_cache, v_cache, pos, window: int):
+    """Decode against a ring-buffer cache of size ``window``."""
+    b, _, h, hd = q.shape
+    win, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgx,bckx->bkgc", qg, k_cache.astype(jnp.float32))
+    slot = jnp.arange(win)
+    # slot holds absolute position: p_abs = pos - ((pos - slot) mod win)
+    age = (pos[:, None] - slot[None, :]) % win
+    p_abs = pos[:, None] - age
+    mask = (p_abs >= 0) & (p_abs <= pos[:, None])
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckx->bkgx", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

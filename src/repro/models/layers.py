@@ -1,0 +1,119 @@
+"""Shared layers: norms, embeddings, RoPE, MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import Param
+
+
+# ------------------------------------------------------------------- norms
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": Param((d,), (None,), "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": Param((d,), (None,), "ones"),
+            "bias": Param((d,), (None,), "zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# -------------------------------------------------------------- embeddings
+
+def embedding_spec(vocab: int, d: int) -> dict:
+    return {"table": Param((vocab, d), ("vocab", "embed"), "embed")}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Project to (padded) vocab logits."""
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+def output_head_spec(d: int, vocab: int) -> dict:
+    return {"proj": Param((d, vocab), ("embed", "vocab"), "normal")}
+
+
+def output_head(p, x):
+    return jnp.einsum("...d,dv->...v", x, p["proj"])
+
+
+def positional_embedding_spec(max_len: int, d: int) -> dict:
+    return {"pos": Param((max_len, d), (None, "embed"), "embed")}
+
+
+def sinusoidal_positions(length: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * 2 * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope_angles(positions, hd: int, theta: float):
+    """positions (...,) -> cos/sin (..., hd/2)."""
+    dim = jnp.arange(hd // 2, dtype=jnp.float32)
+    inv = theta ** (-2.0 * dim / hd)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+
+def swiglu_spec(d: int, f: int) -> dict:
+    return {
+        "wi_gate": Param((d, f), ("embed", "mlp")),
+        "wi_up": Param((d, f), ("embed", "mlp")),
+        "wo": Param((f, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["wo"])
+
+
+def gelu_mlp_spec(d: int, f: int) -> dict:
+    return {
+        "wi": Param((d, f), ("embed", "mlp")),
+        "bi": Param((f,), ("mlp",), "zeros"),
+        "wo": Param((f, d), ("mlp", "embed")),
+        "bo": Param((d,), (None,), "zeros"),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"])
+    return jnp.einsum("...f,fd->...d", h, p["wo"]) + p["bo"]

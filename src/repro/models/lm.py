@@ -1,0 +1,58 @@
+"""LM losses and public model API."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .params import abstract_params, init_params, count_params
+
+
+def causal_lm_loss(logits, targets, cfg, mask=None, z_loss: float = 1e-4):
+    """Next-token cross entropy with padded-vocab masking + z-loss.
+
+    logits (B, S, Vpad); targets (B, S) — already shifted by the data
+    pipeline (targets[t] is the token after inputs[t]).
+    """
+    v = cfg.vocab
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab entries out of the softmax
+    vpad = logits.shape[-1]
+    if vpad > v:
+        neg = jnp.full((vpad - v,), -1e30, jnp.float32)
+        logits = logits.at[..., v:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    total = jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return total, {"nll": jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)}
+
+
+class Model:
+    """Thin functional wrapper binding a config to spec/init/apply."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.spec = transformer.lm_spec(cfg)
+
+    def init(self, key, dtype=None):
+        return init_params(self.spec, key,
+                           dtype or jnp.dtype(self.cfg.param_dtype))
+
+    def abstract(self, dtype=None):
+        return abstract_params(self.spec,
+                               dtype or jnp.dtype(self.cfg.param_dtype))
+
+    def n_params(self) -> int:
+        return count_params(self.spec)
+
+    def apply(self, params, tokens, **kw):
+        return transformer.forward(params, self.cfg, tokens, **kw)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return transformer.init_cache(self.cfg, batch, cache_len)

@@ -1,0 +1,108 @@
+"""Minimal parameter/spec system (no flax dependency).
+
+A model is described by a *spec tree*: nested dicts whose leaves are
+``Param(shape, logical_axes, init, dtype)``.  From the same spec we derive:
+
+  * concrete initialisation (PRNG)              — tests / real training
+  * abstract ShapeDtypeStructs                  — dry-run lowering
+  * NamedShardings via sharding.rules           — pjit in/out shardings
+
+Logical axis names used across the zoo:
+  "embed"   — d_model dim            (FSDP -> data axis by default)
+  "heads"   — attention head dim     (TP -> model axis)
+  "kv"      — kv head dim
+  "mlp"     — feed-forward hidden    (TP -> model axis)
+  "vocab"   — (padded) vocabulary    (TP -> model axis)
+  "expert"  — MoE expert dim         (EP -> model axis)
+  "layers"  — stacked repeat dim     (never sharded)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"         # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def map_spec(fn: Callable, spec):
+    """Map fn over Param leaves of a nested dict tree."""
+    if is_param(spec):
+        return fn(spec)
+    if isinstance(spec, dict):
+        return {k: map_spec(fn, v) for k, v in spec.items()}
+    raise TypeError(type(spec))
+
+
+def init_params(spec, key: jax.Array, dtype=jnp.float32):
+    """Concrete init. Deterministic per-leaf keys derived from tree paths."""
+    leaves = []
+
+    def collect(path, s):
+        if is_param(s):
+            leaves.append((path, s))
+        else:
+            for k in sorted(s):
+                collect(path + (k,), s[k])
+
+    collect((), spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out: dict = {}
+    for (path, p), k in zip(leaves, keys):
+        if p.init == "zeros":
+            val = jnp.zeros(p.shape, dtype)
+        elif p.init == "ones":
+            val = jnp.ones(p.shape, dtype)
+        else:
+            fan_in = p.shape[0] if len(p.shape) > 1 else max(p.shape[0], 1)
+            std = p.scale / math.sqrt(fan_in)
+            if p.init == "embed":
+                std = p.scale * 0.02
+            elif p.init == "small":
+                std = p.scale * 0.006
+            val = (jax.random.normal(k, p.shape, jnp.float32) * std).astype(dtype)
+        node = out
+        for seg in path[:-1]:
+            node = node.setdefault(seg, {})
+        node[path[-1]] = val
+    return out
+
+
+def abstract_params(spec, dtype=jnp.float32):
+    return map_spec(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec)
+
+
+def spec_axes(spec):
+    return map_spec(lambda p: p.axes, spec)
+
+
+def count_params(spec) -> int:
+    total = [0]
+    map_spec(lambda p: total.__setitem__(0, total[0] + int(np.prod(p.shape))),
+             spec)
+    return total[0]
+
+
+def stack_spec(spec, reps: int):
+    """Prepend a 'layers' axis to every leaf (for scan-over-layers)."""
+    return map_spec(
+        lambda p: Param((reps,) + p.shape, ("layers",) + p.axes,
+                        p.init, p.scale), spec)

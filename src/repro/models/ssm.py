@@ -1,0 +1,434 @@
+"""Recurrent blocks: Mamba selective SSM, xLSTM mLSTM / sLSTM.
+
+Training paths are *chunk-parallel*:
+  * mamba  — `associative_scan` inside fixed-size chunks, `lax.scan` carrying
+    the (d_inner, d_state) state across chunks (memory O(C * d_inner * ds));
+  * mLSTM  — chunkwise stabilized gated linear attention (flash-linear-
+    attention schedule): intra-chunk C x C attention + inter-chunk matrix
+    state (hd x hd) carry, with running log-max stabilizers (the xLSTM
+    exponential-gate stabilization);
+  * sLSTM  — inherently sequential (recurrent h->gates dependency): a plain
+    `lax.scan` over time.  This is an architectural property, not an
+    implementation shortcut (xLSTM paper §2.3).
+
+Decode paths are O(1)-state recurrent steps — which is exactly why these
+architectures run the `long_500k` shape that dense attention cannot.
+
+Every training path is validated against a step-by-step sequential
+reference in tests/test_ssm.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import Param
+from . import layers
+
+F32 = jnp.float32
+
+
+# =====================================================================
+# Mamba selective SSM
+# =====================================================================
+
+def mamba_dims(cfg):
+    di = int(cfg.ssm.expand * cfg.d_model)
+    dtr = cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+    return di, dtr, cfg.ssm.d_state, cfg.ssm.conv_kernel
+
+
+def mamba_spec(cfg, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    di, dtr, ds, kc = mamba_dims(cfg)
+    return {
+        "in_proj": Param((d, 2 * di), ("embed", "mlp")),
+        "conv_w": Param((kc, di), (None, "mlp"), "normal", 0.5),
+        "conv_b": Param((di,), ("mlp",), "zeros"),
+        "x_proj": Param((di, dtr + 2 * ds), ("mlp", None)),
+        "dt_proj": Param((dtr, di), (None, "mlp")),
+        "dt_bias": Param((di,), ("mlp",), "zeros"),
+        "a_log": Param((di, ds), ("mlp", None), "ones"),
+        "d_skip": Param((di,), ("mlp",), "ones"),
+        "out_proj": Param((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv: x (B,S,di), w (K,di).  state (B,K-1,di) holds
+    the trailing inputs of the previous segment (for decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, j:j + x.shape[1], :] * w[j] for j in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out + b, new_state
+
+
+def _mamba_scan_chunked(a, u, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + u_t ; a,u (B,S,di,ds); h0 (B,di,ds)."""
+    b, s, di, ds = a.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        # identity steps: decay 1, input 0 — state passes through unchanged
+        a = jnp.concatenate([a, jnp.ones((b, pad, di, ds), a.dtype)], axis=1)
+        u = jnp.concatenate([u, jnp.zeros((b, pad, di, ds), u.dtype)], axis=1)
+    s_pad = s + pad
+    nc = s_pad // c
+    ac = jnp.moveaxis(a.reshape(b, nc, c, di, ds), 1, 0)
+    uc = jnp.moveaxis(u.reshape(b, nc, c, di, ds), 1, 0)
+    del s_pad
+
+    def assoc(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h, au):
+        a_k, u_k = au                            # (B,C,di,ds)
+        acum, ucum = jax.lax.associative_scan(assoc, (a_k, u_k), axis=1)
+        h_t = acum * h[:, None] + ucum           # (B,C,di,ds)
+        return h_t[:, -1], h_t
+
+    h_end, hs = jax.lax.scan(chunk_body, h0, (ac, uc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s + pad, di, ds)[:, :s]
+    # identity padding keeps the carried state exact
+    return hs, h_end
+
+
+def _mamba_scan_fused(dt, x1, bmat, cmat, a_mat, h0, chunk: int):
+    """Chunked selective scan with the (B,S,di,ds)-sized decay/input/state
+    tensors materialised only per chunk (beyond-paper §Perf iteration: the
+    full-sequence (B,S,di,ds) buffers dominated hymba's HBM roofline term).
+
+    dt, x1 (B,S,di) f32; bmat, cmat (B,S,ds) f32; a_mat (di,ds).
+    Returns (y (B,S,di), h_end (B,di,ds))."""
+    b, s, di = dt.shape
+    ds = bmat.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zdt = jnp.zeros((b, pad, di), dt.dtype)
+        dt = jnp.concatenate([dt, zdt], axis=1)          # dt=0 -> decay=1
+        x1 = jnp.concatenate([x1, zdt], axis=1)
+        zb = jnp.zeros((b, pad, ds), bmat.dtype)
+        bmat = jnp.concatenate([bmat, zb], axis=1)
+        cmat = jnp.concatenate([cmat, zb], axis=1)
+    nc = (s + pad) // c
+
+    def chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, c, t.shape[-1]), 1, 0)
+
+    def assoc(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        dt_k, x1_k, b_k, c_k = xs                        # (B,C,...)
+        decay = jnp.exp(dt_k[..., None] * a_mat[None, None])
+        u = (dt_k * x1_k)[..., None] * b_k[:, :, None, :]
+        acum, ucum = jax.lax.associative_scan(assoc, (decay, u), axis=1)
+        h_t = acum * h[:, None] + ucum                   # (B,C,di,ds)
+        y_k = jnp.sum(h_t * c_k[:, :, None, :], axis=-1)
+        return h_t[:, -1], y_k
+
+    h_end, ys = jax.lax.scan(
+        body, h0, (chunks(dt), chunks(x1), chunks(bmat), chunks(cmat)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s + pad, di)[:, :s]
+    return y, h_end
+
+
+def mamba_block(p, x, cfg, state: Optional[Tuple] = None,
+                return_state: bool = False):
+    """x (B,S,d) -> (B,S,d).  state = (h (B,di,ds), conv (B,K-1,di))."""
+    di, dtr, ds, kc = mamba_dims(cfg)
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[1] if state is not None else None
+    x1, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], conv_state)
+    x1 = jax.nn.silu(x1)
+
+    dbc = jnp.einsum("bsi,ie->bse", x1, p["x_proj"])
+    dt_r = dbc[..., :dtr]
+    bmat = dbc[..., dtr:dtr + ds].astype(F32)
+    cmat = dbc[..., dtr + ds:].astype(F32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(F32)
+    a_mat = -jnp.exp(p["a_log"].astype(F32))                 # (di, ds)
+
+    h0 = state[0].astype(F32) if state is not None else \
+        jnp.zeros((b, di, ds), F32)
+    y, h_end = _mamba_scan_fused(dt, x1.astype(F32), bmat, cmat, a_mat, h0,
+                                 cfg.ssm.chunk)
+    y = y + p["d_skip"].astype(F32) * x1.astype(F32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        return out, (h_end.astype(F32), new_conv)
+    return out
+
+
+def mamba_decode(p, x, cfg, state):
+    """Single-token step: x (B,1,d); state (h, conv)."""
+    return mamba_block(p, x, cfg, state=state, return_state=True)
+
+
+def mamba_ref(p, x, cfg):
+    """Sequential oracle (python loop over time)."""
+    di, dtr, ds, kc = mamba_dims(cfg)
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1, _ = _causal_conv(x1, p["conv_w"], p["conv_b"])
+    x1 = jax.nn.silu(x1)
+    dbc = jnp.einsum("bsi,ie->bse", x1, p["x_proj"])
+    dt_r, bmat, cmat = (dbc[..., :dtr], dbc[..., dtr:dtr + ds].astype(F32),
+                        dbc[..., dtr + ds:].astype(F32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(F32)
+    a_mat = -jnp.exp(p["a_log"].astype(F32))
+    h = jnp.zeros((b, di, ds), F32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t, :, None] * a_mat[None])
+        h = decay * h + (dt[:, t] * x1[:, t].astype(F32))[..., None] \
+            * bmat[:, t, None, :]
+        ys.append(jnp.sum(h * cmat[:, t, None, :], axis=-1))
+    y = jnp.stack(ys, axis=1) + p["d_skip"].astype(F32) * x1.astype(F32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+# =====================================================================
+# mLSTM (xLSTM matrix memory) — chunkwise gated linear attention
+# =====================================================================
+
+def mlstm_dims(cfg):
+    di = int(cfg.ssm.expand * cfg.d_model) if cfg.ssm else cfg.d_model
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+def mlstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    di, h, hd = mlstm_dims(cfg)
+    return {
+        "up": Param((d, 2 * di), ("embed", "mlp")),
+        "wq": Param((di, h, hd), ("mlp", "heads", None)),
+        "wk": Param((di, h, hd), ("mlp", "heads", None)),
+        "wv": Param((di, h, hd), ("mlp", "heads", None)),
+        "wi": Param((di, h), ("mlp", "heads"), "small"),
+        "wf": Param((di, h), ("mlp", "heads"), "small"),
+        "norm": layers.rmsnorm_spec(hd),
+        "down": Param((di, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, carry, hd):
+    """One chunk of stabilized gated linear attention.
+
+    q,k,v (B,H,C,hd); log_f/log_i (B,H,C); carry = (Cst (B,H,hd,hd),
+    nst (B,H,hd), mst (B,H)).  Returns (h (B,H,C,hd), new carry).
+    """
+    cst, nst, mst = carry
+    c = q.shape[2]
+    f_cum = jnp.cumsum(log_f, axis=-1)                       # F_t
+    # intra-chunk log weights b[t,s] = F_t - F_s + log_i_s  (s <= t)
+    bmat = f_cum[..., :, None] - f_cum[..., None, :] + log_i[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    bmat = jnp.where(tri, bmat, -jnp.inf)
+    m_intra = jnp.max(bmat, axis=-1)                         # (B,H,C)
+    m_cross = mst[..., None] + f_cum                         # (B,H,C)
+    m_t = jnp.maximum(m_intra, m_cross)
+
+    w_intra = jnp.exp(bmat - m_t[..., None])                 # (B,H,C,C)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bhtx,bhsx->bhts", q * scale, k) * w_intra
+    h_intra = jnp.einsum("bhts,bhsx->bhtx", scores, v)
+    n_intra = jnp.einsum("bhts,bhsx->bhtx", w_intra, k)      # Σ w k_s
+
+    w_cross = jnp.exp(m_cross - m_t)                         # (B,H,C)
+    h_cross = jnp.einsum("bhtx,bhxy->bhty", q * scale, cst) * w_cross[..., None]
+    n_cross = nst[:, :, None, :] * w_cross[..., None]
+
+    h_num = h_intra + h_cross
+    n_vec = n_intra + n_cross                                # (B,H,C,hd)
+    denom = jnp.abs(jnp.einsum("bhtx,bhtx->bht", q * scale, n_vec))
+    denom = jnp.maximum(denom, jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+
+    # ---- carry update to end of chunk
+    f_end = f_cum[..., -1]                                   # (B,H)
+    m_end_intra = jnp.max(f_end[..., None] - f_cum + log_i, axis=-1)
+    m_new = jnp.maximum(mst + f_end, m_end_intra)
+    w_state = jnp.exp(mst + f_end - m_new)
+    w_toks = jnp.exp(f_end[..., None] - f_cum + log_i - m_new[..., None])
+    cst_new = cst * w_state[..., None, None] + jnp.einsum(
+        "bhsx,bhsy,bhs->bhxy", k, v, w_toks)
+    nst_new = nst * w_state[..., None] + jnp.einsum(
+        "bhsx,bhs->bhx", k, w_toks)
+    return h, (cst_new, nst_new, m_new)
+
+
+def mlstm_inner(q, k, v, log_f, log_i, chunk: int, carry=None):
+    """q,k,v (B,S,H,hd) -> h (B,S,H,hd) with chunkwise scan."""
+    b, s0, h, hd = q.shape
+    c = min(chunk, s0)
+    pad = (-s0) % c
+    if pad:
+        # identity steps: f = 1 (log 0), i -> 0 (log -inf) leave state intact
+        zq = jnp.zeros((b, pad, h, hd), q.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zq.astype(k.dtype)], axis=1)
+        v = jnp.concatenate([v, zq.astype(v.dtype)], axis=1)
+        log_f = jnp.concatenate(
+            [log_f, jnp.zeros((b, pad, h), log_f.dtype)], axis=1)
+        log_i = jnp.concatenate(
+            [log_i, jnp.full((b, pad, h), -1e30, log_i.dtype)], axis=1)
+    s = s0 + pad
+    nc = s // c
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(b, nc, c, h, hd).transpose(0, 1, 3, 2, 4), 1, 0)
+
+    def gates_to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, nc, c, h).transpose(0, 1, 3, 2), 1, 0)
+
+    qc, kc, vc = to_chunks(q.astype(F32)), to_chunks(k.astype(F32)), \
+        to_chunks(v.astype(F32))
+    fc, ic = gates_to_chunks(log_f.astype(F32)), gates_to_chunks(
+        log_i.astype(F32))
+    if carry is None:
+        carry = (jnp.zeros((b, h, hd, hd), F32), jnp.zeros((b, h, hd), F32),
+                 jnp.full((b, h), -1e30, F32))
+
+    def body(cr, args):
+        qk, kk, vk, fk, ik = args
+        hk, cr = _mlstm_chunk(qk, kk, vk, fk, ik, cr, hd)
+        return cr, hk
+
+    carry, hs = jax.lax.scan(body, carry, (qc, kc, vc, fc, ic))
+    hs = jnp.moveaxis(hs, 0, 1)                              # (B,nc,H,C,hd)
+    hs = hs.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)[:, :s0]
+    return hs, carry
+
+
+def mlstm_block(p, x, cfg, state=None, return_state: bool = False):
+    """x (B,S,d) -> (B,S,d)."""
+    di, h, hd = mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bsi,ihx->bshx", xi, p["wq"])
+    k = jnp.einsum("bsi,ihx->bshx", xi, p["wk"])
+    v = jnp.einsum("bsi,ihx->bshx", xi, p["wv"])
+    log_i = jnp.einsum("bsi,ih->bsh", xi, p["wi"]).astype(F32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", xi, p["wf"]).astype(F32))
+    hs, carry = mlstm_inner(q, k, v, log_f, log_i,
+                            cfg.ssm.chunk if cfg.ssm else 64, carry=state)
+    hs = layers.rmsnorm(p["norm"], hs.astype(x.dtype), cfg.norm_eps)
+    y = hs.reshape(x.shape[0], x.shape[1], di) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down"])
+    if return_state:
+        return out, carry
+    return out
+
+
+def mlstm_ref_inner(q, k, v, log_f, log_i):
+    """Sequential oracle of the stabilized mLSTM recurrence."""
+    b, s, h, hd = q.shape
+    scale = hd ** -0.5
+    cst = jnp.zeros((b, h, hd, hd), F32)
+    nst = jnp.zeros((b, h, hd), F32)
+    mst = jnp.full((b, h), -1e30, F32)
+    outs = []
+    for t in range(s):
+        lf, li = log_f[:, t].astype(F32), log_i[:, t].astype(F32)
+        m_new = jnp.maximum(lf + mst, li)
+        fw = jnp.exp(lf + mst - m_new)
+        iw = jnp.exp(li - m_new)
+        kt, vt, qt = k[:, t].astype(F32), v[:, t].astype(F32), \
+            q[:, t].astype(F32) * scale
+        cst = cst * fw[..., None, None] + iw[..., None, None] * \
+            jnp.einsum("bhx,bhy->bhxy", kt, vt)
+        nst = nst * fw[..., None] + iw[..., None] * kt
+        mst = m_new
+        num = jnp.einsum("bhx,bhxy->bhy", qt, cst)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhx,bhx->bh", qt, nst)),
+                          jnp.exp(-mst))
+        outs.append(num / den[..., None])
+    return jnp.stack(outs, axis=1)
+
+
+def mlstm_decode(p, x, cfg, state):
+    """Single-token mLSTM step (recurrent form)."""
+    return mlstm_block(p, x, cfg, state=state, return_state=True)
+
+
+# =====================================================================
+# sLSTM — sequential scalar-memory LSTM with exponential gating
+# =====================================================================
+
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "wx": Param((d, h, 4, hd), ("embed", "heads", None, None)),
+        "r": Param((h, hd, 4, hd), ("heads", None, None, None), "small"),
+        "b": Param((h, 4, hd), ("heads", None, None), "zeros"),
+        "norm": layers.rmsnorm_spec(d),
+        "down": Param((d, d), ("embed", "embed")),
+    }
+
+
+def _slstm_step(p, xt, state, eps):
+    """xt (B,H,4,hd) pre-projected; state = (c, n, h, m) each (B,H,hd)."""
+    c, n, hprev, m = state
+    rec = jnp.einsum("bhx,hxgy->bhgy", hprev, p["r"].astype(F32))
+    g = xt.astype(F32) + rec + p["b"].astype(F32)
+    i_t, f_t, z_t, o_t = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    m_new = jnp.maximum(f_t + m, i_t)
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(f_t + m - m_new)
+    c_new = f * c + i * jnp.tanh(z_t)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, eps)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p, x, cfg, state=None, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xp = jnp.einsum("bsd,dhgy->bshgy", x, p["wx"])
+    if state is None:
+        z = jnp.zeros((b, h, hd), F32)
+        state = (z, z, z, jnp.full((b, h, hd), -1e30, F32))
+
+    def step(st, xt):
+        st = _slstm_step(p, xt, st, 1e-6)
+        return st, st[2]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xp, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = layers.rmsnorm(p["norm"], hs, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", hs, p["down"])
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode(p, x, cfg, state):
+    return slstm_block(p, x, cfg, state=state, return_state=True)

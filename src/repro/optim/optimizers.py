@@ -1,0 +1,154 @@
+"""Optimizers: AdamW and Adafactor (factored second moments).
+
+Adafactor is the memory story for the 400B MoE: O(n+m) second-moment state
+for an (n, m) matrix instead of O(n*m), plus bf16 momentum — ~2.x
+bytes/param of optimizer state instead of 8 (fp32 AdamW m+v), which is what
+fits 16 GB/chip HBM on a single pod (DESIGN.md §6).
+
+State trees mirror the param tree structure exactly (leaf-for-leaf via
+flatten/unflatten), so param shardings map onto optimizer state directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, tree), norm
+
+
+def warmup_cosine(step, *, peak, warmup, total, floor=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+    gl, treedef = jax.tree.flatten(grads)
+    ml = treedef.flatten_up_to(state["m"])
+    vl = treedef.flatten_up_to(state["v"])
+    pl = treedef.flatten_up_to(params)
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(gl, ml, vl, pl):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** cf)
+        vh = v / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        new_m.append(m)
+        new_v.append(v)
+        new_p.append((p.astype(jnp.float32) - lr * step).astype(p.dtype))
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": c})
+
+
+# --------------------------------------------------------------- Adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def vstate(p):
+        if _factored(p.shape):
+            # store row/col stats concatenated is awkward; keep two leaves in
+            # a fixed-width tuple so the tree structure stays regular
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return (jnp.zeros(p.shape, jnp.float32),
+                jnp.zeros((1,), jnp.float32))        # dummy second slot
+    return {"v": jax.tree.map(vstate, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, b1=0.9, decay=0.8,
+                     eps=1e-30, weight_decay=0.0, clip_threshold=1.0,
+                     **_ignored):
+    c = state["count"] + 1
+    beta2 = 1.0 - c.astype(jnp.float32) ** (-decay)
+    gl, treedef = jax.tree.flatten(grads)
+    pl = treedef.flatten_up_to(params)
+    ml = treedef.flatten_up_to(state["m"])
+    vl = treedef.flatten_up_to(state["v"])    # leaves are 2-tuples
+    new_m, new_v, new_p = [], [], []
+    for g, p, m, v in zip(gl, pl, ml, vl):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = beta2 * v[0] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v[1] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            pre = (vr / denom)[..., None] * vc[..., None, :]
+            update = g * jax.lax.rsqrt(jnp.maximum(pre, eps))
+            nv = (vr, vc)
+        else:
+            vv = beta2 * v[0] + (1 - beta2) * g2
+            update = g * jax.lax.rsqrt(jnp.maximum(vv, eps))
+            nv = (vv, v[1])
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        mm = b1 * m.astype(jnp.float32) + (1 - b1) * update
+        step = mm + weight_decay * p.astype(jnp.float32)
+        new_v.append(nv)
+        new_m.append(mm.astype(jnp.bfloat16))
+        new_p.append((p.astype(jnp.float32) - lr * step).astype(p.dtype))
+    return (jax.tree.unflatten(treedef, new_p),
+            {"v": jax.tree.unflatten(treedef, new_v),
+             "m": jax.tree.unflatten(treedef, new_m),
+             "count": c})
+
+
+def opt_init(name: str):
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name]
+
+
+def opt_update(name: str):
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[name]
+
+
+def opt_state_bytes(name: str, params) -> int:
+    """Analytic optimizer-state footprint (for the dry-run memory report)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        n = 1
+        for s in p.shape:
+            n *= s
+        if name == "adamw":
+            total += 8 * n
+        else:
+            total += 2 * n                        # bf16 momentum
+            if _factored(p.shape):
+                rows = n // p.shape[-1]
+                total += 4 * (rows + n // rows if len(p.shape) == 2
+                              else rows + (n // p.shape[-2]))
+            else:
+                total += 4 * n
+    return total

@@ -1,0 +1,67 @@
+"""Serving engine: jitted prefill / decode steps over a slot-based cache.
+
+The cache is a fixed pool of B slots (one per concurrent sequence), each
+with its own position counter — single-token decode steps run for all slots
+at once (continuous batching; the scheduler in scheduler.py fills and
+recycles slots).  For SSM/hybrid architectures the per-slot "cache" is the
+O(1) recurrent state, which is what makes the 524288-token `long_500k`
+shape servable at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine:
+    def __init__(self, model, batch: int, cache_len: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.batch = batch
+        self.cache_len = cache_len
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------- steps
+
+    def _prefill_impl(self, params, tokens, cache, **kw):
+        logits, cache, _ = self.model.apply(
+            params, tokens, mode="prefill", cache=cache, **kw)
+        return logits[:, -1], cache
+
+    def _decode_impl(self, params, tokens, cache, pos):
+        logits, cache, _ = self.model.apply(
+            params, tokens, mode="decode", cache=cache, pos=pos)
+        return logits[:, 0], cache
+
+    # --------------------------------------------------------------- api
+
+    def new_cache(self):
+        return self.model.init_cache(self.batch, self.cache_len)
+
+    def prefill(self, params, tokens, cache, **kw):
+        """tokens (B, S) for all slots (left-padded prompts share S)."""
+        return self._prefill(params, tokens, cache, **kw)
+
+    def decode(self, params, tokens, cache, pos):
+        """tokens (B, 1); pos (B,) per-slot positions."""
+        return self._decode(params, tokens, cache, pos)
+
+    def generate_greedy(self, params, prompts, max_new: int, **kw):
+        """Convenience: batched greedy decode.  prompts (B, S)."""
+        b, s = prompts.shape
+        assert b == self.batch
+        cache = self.new_cache()
+        last, cache = self.prefill(params, prompts, cache, **kw)
+        out = []
+        pos = jnp.full((b,), s, jnp.int32)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        for _ in range(max_new):
+            out.append(tok)
+            logits, cache = self.decode(params, tok, cache, pos)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            pos = pos + 1
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,105 @@
+"""Slot-based continuous batching scheduler.
+
+A fixed pool of B decode slots.  Admission is **token-at-a-time**: a newly
+admitted request streams its prompt through the shared batched decode step
+(one token per tick) until the prompt is exhausted, then flips to
+generation.  Finished sequences release their slot immediately.
+
+Why token-at-a-time instead of a separate batched prefill:
+  * one jit signature for the whole serving loop (decode only);
+  * exact for *every* architecture — KV caches, sliding-window ring
+    buffers, and recurrent SSM states all advance per token with per-slot
+    positions, so no padding/masking corrections are ever needed;
+  * admission cost is O(prompt_len) ticks, amortised across the batch —
+    the classic Orca-style piggyback.  Aligned-batch workloads can use
+    Engine.prefill directly (equal-length prompts need no padding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_tokens: int
+    eos_id: Optional[int] = None
+    output: Optional[list] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    pos: int = 0                 # next cache position to write
+    fed: int = 0                 # prompt tokens already fed
+    generated: int = 0
+
+
+class Scheduler:
+    def __init__(self, engine, params):
+        self.engine = engine
+        self.params = params
+        self.queue: deque = deque()
+        self.slots: List[_Slot] = [_Slot() for _ in range(engine.batch)]
+        self.cache = engine.new_cache()
+        self.done: dict = {}
+        self._feed = np.zeros((engine.batch, 1), np.int32)
+
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s.request is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = _Slot(request=req, pos=0, fed=0, generated=0)
+                self._feed[i, 0] = req.prompt[0]
+
+    def step(self) -> bool:
+        """One engine tick: batched decode over all slots."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.request is not None]
+        if not active:
+            return False
+        pos = np.asarray([s.pos for s in self.slots], np.int32)
+        logits, self.cache = self.engine.decode(
+            self.params, jnp.asarray(self._feed), self.cache,
+            jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        for i in active:
+            s = self.slots[i]
+            s.pos += 1
+            if s.fed < len(s.request.prompt) - 1:
+                # still streaming the prompt
+                s.fed += 1
+                self._feed[i, 0] = s.request.prompt[s.fed]
+                continue
+            # prompt done: nxt[i] is a generated token
+            tok = int(nxt[i])
+            s.request.output.append(tok)
+            s.generated += 1
+            finished = (s.generated >= s.request.max_tokens or
+                        (s.request.eos_id is not None
+                         and tok == s.request.eos_id))
+            if finished:
+                self.done[s.request.rid] = s.request
+                self.slots[i] = _Slot()
+            else:
+                self._feed[i, 0] = tok
+        return True
+
+    def run(self, max_ticks: int = 100_000):
+        ticks = 0
+        while (self.queue or any(s.request for s in self.slots)) \
+                and ticks < max_ticks:
+            if not self.step():
+                break
+            ticks += 1
+        return self.done

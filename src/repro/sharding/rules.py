@@ -1,0 +1,117 @@
+"""Logical-axis -> mesh-axis mapping with divisibility fallback.
+
+2D "FSDP x TP" layout (MaxText-style):
+  embed  -> data axis   (fully-sharded parameters across DP)
+  heads/kv/mlp/vocab/expert -> model axis (tensor/expert parallel)
+  pod    -> pure DP (params replicated across pods; one grad all-reduce)
+
+A mapping is applied only when the dimension is divisible by the mesh axis
+size and the mesh axis is not already consumed by another dimension of the
+same tensor; otherwise the dimension falls back to replicated.  This is what
+makes odd dimensions (25 heads in hymba, 49155-vocab before padding) lower
+everywhere — at reduced efficiency, which the roofline table then exposes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import map_spec, Param
+
+DEFAULT_RULES = {
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "layers": (),
+}
+
+
+def _mesh_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    size = 1
+    for nm in names:
+        size *= mesh.shape[nm]
+    return size
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        target = ()
+        if ax is not None:
+            for cand in rules.get(ax, ()):
+                if cand in mesh.shape and cand not in used \
+                        and dim % _mesh_size(mesh, (cand,)) == 0:
+                    target = target + (cand,)
+                    used.add(cand)
+                    break   # one mesh axis per dim in the default layout
+        if len(target) == 0:
+            parts.append(None)
+        elif len(target) == 1:
+            parts.append(target[0])
+        else:
+            parts.append(target)
+    return P(*parts)
+
+
+def param_shardings(spec_tree, mesh: Mesh, rules=None):
+    """Tree of NamedSharding matching a Param spec tree."""
+    return map_spec(
+        lambda p: NamedSharding(mesh, spec_for(p.shape, p.axes, mesh, rules)),
+        spec_tree)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2,
+                   batch_size: Optional[int] = None) -> NamedSharding:
+    """Shard the leading batch dim over (pod, data); replicate when the
+    batch does not divide (e.g. long_500k's global batch of 1)."""
+    dp = dp_axes(mesh)
+    if batch_size is not None and batch_size % max(_mesh_size(mesh, dp), 1):
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))
+
+
+def batch_shardings_for(specs: dict, mesh: Mesh) -> dict:
+    return {k: batch_sharding(mesh, len(v.shape), v.shape[0])
+            for k, v in specs.items()}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cache_abs, mesh: Mesh):
+    """Shardings for a stacked decode/prefill cache pytree.
+
+    Entries are (reps, B, ...) — batch (dim 1) shards over DP; dim 2 shards
+    over the model axis when divisible.  For KV caches dim 2 is the
+    *sequence*: a 32k cache with kv_heads < model-axis size still spreads
+    16-way (sequence-sharded attention — GSPMD inserts the partial-softmax
+    reduces).  For SSM states dim 2 is d_inner, giving plain TP.  Heads that
+    do divide (e.g. phi-3's 32 kv heads) are handled by the same rule since
+    their dim-2 (seq) shards first; see §Perf for the head-sharded variant.
+    """
+    def one(leaf):
+        shape = leaf.shape
+        parts: list = [None] * len(shape)
+        dp = dp_axes(mesh)
+        dpn = _mesh_size(mesh, dp)
+        if len(shape) >= 2 and dpn > 1 and shape[1] % dpn == 0:
+            parts[1] = dp
+        if len(shape) >= 3 and "model" in mesh.shape:
+            msz = mesh.shape["model"]
+            if shape[2] % msz == 0:
+                parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree.map(one, cache_abs)

@@ -1,0 +1,135 @@
+"""Checkpointing: sharded-state save/restore with async write + elastic
+restore.
+
+Layout:  <dir>/step_<n>/
+            meta.json          — step, leaf paths, shapes/dtypes
+            <leafpath>.npy     — one file per pytree leaf (full logical array)
+
+Arrays are written as *logical* (unsharded) arrays: restore re-shards onto
+whatever mesh the new process brings up (elastic scaling).  At real pod
+scale this becomes per-shard files + OCDBT-style indexing (orbax); the
+format here keeps the same API surface at CPU-test scale (DESIGN.md §8).
+
+Writes happen on a background thread (async checkpointing) so the train
+loop never blocks on disk; ``wait()`` joins before the next save or exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import numpy as np
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_seg(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, state, step: int, blocking: bool = False):
+        self.wait()
+        host = [(k, np.asarray(v)) for k, v in _flatten_with_paths(state)]
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            meta = {"step": step, "leaves": []}
+            for k, arr in host:
+                fn = k.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+                meta["leaves"].append(
+                    {"key": k, "file": fn, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, abstract_state, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``abstract_state``; device_put with
+        ``shardings`` (same tree structure) if given — this is where elastic
+        re-sharding happens."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        by_key = {l["key"]: l for l in meta["leaves"]}
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+        leaves = []
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = [s for _, s in
+                          jax.tree_util.tree_flatten_with_path(shardings)[0]]
+        for i, (pathk, leaf) in enumerate(flat):
+            key = "/".join(_seg(p) for p in pathk)
+            arr = np.load(os.path.join(path, by_key[key]["file"]))
+            if shard_flat is not None:
+                leaves.append(jax.device_put(arr, shard_flat[i]))
+            else:
+                leaves.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,67 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis`` reports FLOPs and bytes but not collective traffic; we
+parse the (post-SPMD, per-device) HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their operand
+bytes, weighted by the algorithmic wire factor of each collective.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# bytes-on-wire multiplier per element byte (ring algorithms, large N limit)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\w*?\d+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device collective bytes by op kind.
+
+    Returns {kind: bytes} plus 'wire_bytes' (wire-factor weighted total)
+    and 'total_bytes' (unweighted).
+    """
+    out = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        result_shape, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(result_shape)
+    stats = dict(out)
+    stats["total_bytes"] = sum(out.values())
+    stats["wire_bytes"] = sum(
+        v * _WIRE_FACTOR.get(k, 1.0) for k, v in out.items())
+    return stats
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))

@@ -1,0 +1,112 @@
+"""Loop-aware HLO collective accounting.
+
+XLA's plain-text HLO lists a ``while`` body once, but a scan-over-layers
+body executes ``known_trip_count`` times — collectives inside it (e.g.
+per-layer tensor-parallel all-reduces) must be scaled by the trip count for
+the roofline's collective term to be honest.
+
+The optimized module conveniently annotates every loop:
+  while(...), condition=%c, body=%b, ...
+      backend_config={"known_trip_count":{"n":"28"}, ...}
+so accounting is: bytes(comp) = direct collective bytes
+                               + sum over while ops: trips * bytes(body).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\w*?\d+)\[([\d,]*)\]")
+_HDR = re.compile(r"^(?:ENTRY )?(%[\w.\-]+) \(", re.M)
+_COLL = re.compile(
+    r"= (\([^)]*\)|\S+) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_WHILE = re.compile(
+    r"while\(%[\w.\-]+\), condition=%[\w.\-]+, body=(%[\w.\-]+)"
+    r".*?backend_config=(\{.*?\})(?:\n|$)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def split_computations(text: str) -> dict:
+    comps = {}
+    matches = list(_HDR.finditer(text))
+    for i, m in enumerate(matches):
+        end = matches[i + 1].start() if i + 1 < len(matches) else len(text)
+        comps[m.group(1)] = text[m.start():end]
+    return comps
+
+
+def _trips(backend_config: str) -> int:
+    try:
+        return int(json.loads(backend_config)
+                   .get("known_trip_count", {}).get("n", 1))
+    except (json.JSONDecodeError, TypeError, ValueError):
+        return 1
+
+
+def collective_bytes_scaled(text: str) -> dict:
+    comps = split_computations(text)
+    entry_m = re.search(r"^ENTRY (%[\w.\-]+)", text, re.M)
+    memo: dict = {}
+
+    def acc(name: str, depth: int = 0) -> dict:
+        if name in memo:
+            return memo[name]
+        body = comps.get(name)
+        if body is None or depth > 16:
+            return {}
+        out: dict = defaultdict(float)
+        for m in _COLL.finditer(body):
+            out[m.group(2)] += _shape_bytes(m.group(1))
+        for m in _WHILE.finditer(body):
+            sub = acc(m.group(1), depth + 1)
+            t = _trips(m.group(2))
+            for k, v in sub.items():
+                out[k] += v * t
+        memo[name] = dict(out)
+        return memo[name]
+
+    total: dict = defaultdict(float)
+    if entry_m:
+        for k, v in acc(entry_m.group(1)).items():
+            total[k] += v
+    stats = dict(total)
+    stats["total_bytes"] = sum(total.values())
+    stats["wire_bytes"] = sum(
+        v * _WIRE_FACTOR.get(k, 1.0) for k, v in total.items())
+    return stats
+
+
+def while_summary(text: str):
+    """[(body, trips)] for reporting."""
+    return [(m.group(1), _trips(m.group(2)))
+            for m in _WHILE.finditer(text)]

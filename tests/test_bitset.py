@@ -1,0 +1,64 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(1, 100), st.data())
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(n, data):
+    bits = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    arr = jnp.asarray(np.array(bits, dtype=bool))
+    packed = bitset.pack(arr, n)
+    assert packed.shape == (bitset.n_words(n),)
+    back = bitset.unpack(packed, n)
+    assert np.array_equal(np.asarray(back), np.array(bits))
+
+
+@given(st.integers(1, 100), st.data())
+@settings(max_examples=50, deadline=None)
+def test_popcount(n, data):
+    s = data.draw(st.sets(st.integers(0, n - 1)))
+    packed = jnp.asarray(bitset.np_pack([s], n)[0])
+    assert int(bitset.popcount(packed)) == len(s)
+
+
+def test_onehot_get_set_clear():
+    n = 70
+    w = bitset.n_words(n)
+    for i in [0, 31, 32, 63, 64, 69]:
+        oh = bitset.onehot(i, w)
+        assert int(bitset.popcount(oh)) == 1
+        assert bool(bitset.get_bit(oh, i))
+        assert not bool(bitset.get_bit(oh, (i + 1) % n))
+        z = bitset.clear_bit(oh, i)
+        assert int(bitset.popcount(z)) == 0
+        assert int(bitset.popcount(bitset.set_bit(z, i))) == 1
+
+
+def test_full():
+    for n in [1, 31, 32, 33, 64, 65, 100]:
+        f = bitset.full(n)
+        assert int(bitset.popcount(f)) == n
+
+
+@given(st.integers(2, 64), st.data())
+@settings(max_examples=30, deadline=None)
+def test_or_matmul_matches_numpy(n, data):
+    rng = np.random.RandomState(data.draw(st.integers(0, 10000)))
+    rows_bool = rng.rand(n, n) < 0.3
+    masks_bool = rng.rand(5, n) < 0.3
+    rows = jnp.asarray(bitset.np_pack([set(np.nonzero(r)[0]) for r in rows_bool], n))
+    masks = jnp.asarray(bitset.np_pack([set(np.nonzero(r)[0]) for r in masks_bool], n))
+    out = bitset.or_matmul(masks, rows, n)
+    want = (masks_bool.astype(int) @ rows_bool.astype(int)) > 0
+    got = np.asarray(bitset.unpack(out, n))
+    assert np.array_equal(got, want)
+
+
+def test_np_pack_unpack():
+    s = {0, 5, 33, 63}
+    p = bitset.np_pack([s], 64)[0]
+    assert bitset.np_unpack(p, 64) == s

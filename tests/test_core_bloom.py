@@ -1,0 +1,69 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=8),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_murmur_matches_reference(words, seed):
+    arr = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = int(bloom.murmur3_words(arr, np.uint32(seed)))
+    want = bloom.murmur3_ref(words, seed)
+    assert got == want
+
+
+def test_murmur_batched():
+    rng = np.random.RandomState(0)
+    batch = rng.randint(0, 2**32, size=(17, 2), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(bloom.murmur3_words(jnp.asarray(batch), bloom.SEED1))
+    for i in range(17):
+        assert int(got[i]) == bloom.murmur3_ref(batch[i], int(bloom.SEED1))
+
+
+def test_no_false_negatives():
+    """Inserted elements are always reported present (Bloom invariant)."""
+    rng = np.random.RandomState(1)
+    m = 1 << 16
+    filt = bloom.make_filter(m)
+    words = jnp.asarray(rng.randint(0, 2**31, size=(500, 2)).astype(np.uint32))
+    valid = jnp.ones((500,), dtype=bool)
+    new, filt = bloom.query_and_insert(filt, words, valid, m)
+    assert bool(jnp.all(new))          # empty filter: everything is new
+    new2, _ = bloom.query_and_insert(filt, words, valid, m)
+    assert not bool(jnp.any(new2))     # all present now
+
+
+def test_false_positive_rate_reasonable():
+    """With m/n >= 24 and k=17 the paper expects ~1e-5 fp; test <= 1e-2."""
+    rng = np.random.RandomState(2)
+    n_elems = 2000
+    m = n_elems * 24
+    filt = bloom.make_filter(m)
+    a = jnp.asarray(rng.randint(0, 2**31, size=(n_elems, 2)).astype(np.uint32))
+    _, filt = bloom.query_and_insert(filt, a, jnp.ones((n_elems,), bool), m)
+    b = jnp.asarray(rng.randint(0, 2**31, size=(20000, 2)).astype(np.uint32))
+    idx = bloom.probe_indices(b, m)
+    fp = float(jnp.mean(bloom.query(filt, idx)))
+    assert fp <= 1e-2, fp
+
+
+def test_invalid_entries_not_inserted():
+    m = 1 << 12
+    filt = bloom.make_filter(m)
+    words = jnp.asarray(np.array([[1, 2], [3, 4]], dtype=np.uint32))
+    valid = jnp.asarray([True, False])
+    _, filt = bloom.query_and_insert(filt, words, valid, m)
+    idx = bloom.probe_indices(words, m)
+    present = np.asarray(bloom.query(filt, idx))
+    assert present[0] and not present[1]
+
+
+def test_probe_indices_spread():
+    words = jnp.asarray(np.array([[123, 456]], dtype=np.uint32))
+    idx = np.asarray(bloom.probe_indices(words, 1 << 20, 17))[0]
+    assert len(set(idx.tolist())) == 17          # distinct probes w.h.p.
+    assert idx.min() >= 0 and idx.max() < (1 << 20)

@@ -1,0 +1,91 @@
+"""eliminated_degrees (the TPU-native Q(S,v) computation) vs the paper's DFS."""
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset, components, expand, graph
+
+
+def _check_graph_state(g, s):
+    adj = jnp.asarray(g.packed())
+    sw = jnp.asarray(bitset.np_pack([s], g.n)[0])
+    adjb = [list(map(bool, row)) for row in g.adj]
+    for schedule in ("doubling", "while", "linear"):
+        degs, _ = components.eliminated_degrees(adj, sw, g.n, schedule=schedule)
+        for v in range(g.n):
+            if v in s:
+                continue
+            assert int(degs[v]) == expand.degree_oracle(adjb, s, v), (
+                schedule, v, s)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_gnp(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 48)
+    g = graph.gnp(n, rng.choice([0.08, 0.25, 0.5, 0.9]), seed)
+    s = set(rng.sample(range(n), rng.randint(0, n - 1)))
+    _check_graph_state(g, s)
+
+
+def test_empty_s_is_plain_degree():
+    g = graph.queen(4)
+    adj = jnp.asarray(g.packed())
+    sw = jnp.zeros((g.w,), dtype=jnp.uint32)
+    degs, _ = components.eliminated_degrees(adj, sw, g.n)
+    assert np.array_equal(np.asarray(degs), g.degrees())
+
+
+def test_word_boundary_graphs():
+    # n crossing 32/64 boundaries exercises multi-word packing
+    for n in (31, 32, 33, 63, 64, 65):
+        g = graph.cycle(n)
+        s = {1, 2, 3, n - 2}
+        _check_graph_state(g, s)
+
+
+def test_path_through_s_chain():
+    # 0-1-2-3-4 path: eliminating {1,2,3} makes 0 adjacent to 4
+    g = graph.path(5)
+    adj = jnp.asarray(g.packed())
+    sw = jnp.asarray(bitset.np_pack([{1, 2, 3}], 5)[0])
+    degs, _ = components.eliminated_degrees(adj, sw, 5)
+    assert int(degs[0]) == 1 and int(degs[4]) == 1
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_degrees_match_oracle(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 34)
+    g = graph.gnp(n, rng.random(), seed % 7919)
+    s = set(rng.sample(range(n), rng.randint(0, n - 1)))
+    adj = jnp.asarray(g.packed())
+    sw = jnp.asarray(bitset.np_pack([s], n)[0])
+    degs, _ = components.eliminated_degrees(adj, sw, n)
+    adjb = [list(map(bool, row)) for row in g.adj]
+    vs = [v for v in range(n) if v not in s]
+    v = rng.choice(vs)
+    assert int(degs[v]) == expand.degree_oracle(adjb, s, v)
+
+
+def test_reach_reused_by_expand_block():
+    g = graph.grid(4, 4)
+    adj = jnp.asarray(g.packed())
+    states = jnp.asarray(bitset.np_pack([set(), {0, 1}, {5}], g.n))
+    valid = jnp.asarray([True, True, True])
+    allowed = bitset.full(g.n)
+    children, feas, degs, reach = expand.expand_block(
+        adj, states, valid, jnp.int32(3), allowed, g.n)
+    assert children.shape == (3, g.n, g.w)
+    assert feas.shape == (3, g.n)
+    # child bitsets contain the parent plus exactly one vertex
+    pc = np.asarray(children)
+    for b in range(3):
+        for v in range(g.n):
+            got = bitset.np_unpack(pc[b, v], g.n)
+            want = bitset.np_unpack(np.asarray(states[b]), g.n) | {v}
+            assert got == want

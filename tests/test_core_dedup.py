@@ -1,0 +1,54 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dedup
+
+
+def _np_unique_rows(rows, valid):
+    live = rows[valid]
+    return np.unique(live, axis=0) if len(live) else live
+
+
+@given(st.integers(0, 10000), st.integers(1, 200), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_dedup_matches_numpy_unique(seed, m, w):
+    rng = np.random.RandomState(seed)
+    # small value range to force duplicates
+    rows = rng.randint(0, 4, size=(m, w)).astype(np.uint32)
+    valid = rng.rand(m) < 0.8
+    cap = m + 4
+    buf, count, dropped = dedup.dedup_compact(
+        jnp.asarray(rows), jnp.asarray(valid), cap)
+    want = _np_unique_rows(rows, valid)
+    count = int(count)
+    assert int(dropped) == 0
+    assert count == len(want)
+    got = np.asarray(buf)[:count]
+    assert np.array_equal(np.sort(got, axis=0), np.sort(want, axis=0)) or \
+        np.array_equal(got[np.lexsort(got.T[::-1])], want[np.lexsort(want.T[::-1])])
+
+
+def test_overflow_drops_and_counts():
+    rows = jnp.asarray(np.arange(40, dtype=np.uint32).reshape(20, 2))
+    valid = jnp.ones((20,), dtype=bool)
+    buf, count, dropped = dedup.dedup_compact(rows, valid, 8)
+    assert int(count) == 8 and int(dropped) == 12
+
+
+def test_all_invalid():
+    rows = jnp.asarray(np.zeros((10, 2), dtype=np.uint32))
+    valid = jnp.zeros((10,), dtype=bool)
+    buf, count, dropped = dedup.dedup_compact(rows, valid, 16)
+    assert int(count) == 0 and int(dropped) == 0
+
+
+def test_duplicates_across_validity():
+    rows = np.array([[1, 0], [1, 0], [2, 0], [2, 0], [3, 0]], dtype=np.uint32)
+    valid = np.array([True, True, True, False, True])
+    buf, count, dropped = dedup.dedup_compact(
+        jnp.asarray(rows), jnp.asarray(valid), 8)
+    assert int(count) == 3   # {1,2,3}
+    got = set(map(tuple, np.asarray(buf)[:3].tolist()))
+    assert got == {(1, 0), (2, 0), (3, 0)}

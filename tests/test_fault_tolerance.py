@@ -1,0 +1,105 @@
+"""Fault tolerance: checkpoint/restart, crash injection + supervisor,
+elastic restore, async checkpointing."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import Model
+from repro.train import step as step_lib
+from repro.train.checkpoint import CheckpointManager
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv=2, d_ff=64, vocab=128,
+                  vocab_pad_multiple=64)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    m = Model(CFG)
+    tcfg = TrainConfig()
+    state = step_lib.init_state(m, jax.random.PRNGKey(0), tcfg)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(state, s, blocking=True)
+    assert mgr.all_steps() == [3, 4]        # gc keeps last 2
+    restored, step = mgr.restore(jax.eval_shape(lambda: state))
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(tmp_path):
+    m = Model(CFG)
+    state = step_lib.init_state(m, jax.random.PRNGKey(0), TrainConfig())
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(state, 7, blocking=False)      # background thread
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_crash_restart_supervisor(tmp_path):
+    """Inject a crash at step 30; supervisor restarts; the run resumes from
+    the step-20 checkpoint and finishes all 50 steps."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.supervisor",
+           "--max-restarts", "2", "--",
+           sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-0.6b", "--reduced", "--steps", "50",
+           "--batch", "2", "--seq", "32",
+           "--ckpt-dir", str(tmp_path), "--ckpt-every", "20",
+           "--crash-at-step", "30"]
+    # fault injection is one-shot (a marker file in the ckpt dir records
+    # that the crash already fired), so the restarted run resumes from the
+    # step-20 checkpoint and completes.
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "injected crash at step 30" in out.stdout
+    assert "resumed from step" in out.stdout
+    assert "[train] done" in out.stdout
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoints are logical arrays: restoring onto different shardings
+    (device counts) must reproduce identical values."""
+    m = Model(CFG)
+    tcfg = TrainConfig()
+    state = step_lib.init_state(m, jax.random.PRNGKey(1), tcfg)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(state, 5, blocking=True)
+    # restore without shardings (single device) — values equal
+    restored, _ = mgr.restore(jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_resume_is_exact(tmp_path):
+    """50 straight steps == 30 steps + checkpoint + resume + 20 steps."""
+    from repro.data.synthetic import SyntheticLM
+    m = Model(CFG)
+    tcfg = TrainConfig(learning_rate=1e-3)
+    fn = jax.jit(step_lib.build_train_step(m, tcfg))
+    data = SyntheticLM(vocab=128, seq_len=32, global_batch=4, seed=9)
+
+    def run(state, lo, hi):
+        for i in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            state, _ = fn(state, batch)
+        return state
+
+    s_straight = run(step_lib.init_state(m, jax.random.PRNGKey(2), tcfg),
+                     0, 25)
+    s_mid = run(step_lib.init_state(m, jax.random.PRNGKey(2), tcfg), 0, 15)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(s_mid, 15, blocking=True)
+    s_resumed, step = mgr.restore(jax.eval_shape(lambda: s_mid))
+    s_resumed = run(s_resumed, step, 25)
+    for a, b in zip(jax.tree.leaves(s_straight),
+                    jax.tree.leaves(s_resumed)):
+        assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)

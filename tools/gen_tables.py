@@ -1,0 +1,59 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts."""
+import json, glob, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from benchmarks.roofline import roofline_row, load_cells, LEVERS
+
+cells = load_cells()
+rows = {t: roofline_row(t, c) for t, c in cells.items()}
+
+def fmt(x):
+    return f"{x:.3e}"
+
+# ---- dry-run table (single + multi pod, baseline only)
+print("## dryrun table")
+print("| arch | shape | mesh | status | FLOPs/dev (HLO raw) | HBM bytes/dev | wire bytes/dev | temp bytes/dev | compile s |")
+print("|---|---|---|---|---|---|---|---|---|")
+for tag in sorted(cells):
+    if "__opt" in tag or "__g1" in tag or "__r" in tag.split("__")[-1]:
+        continue
+    c = cells[tag]
+    a, s, m = tag.split("__")[:3]
+    if c["status"] != "ok":
+        reason = c.get("reason", c.get("error", ""))[:60]
+        print(f"| {a} | {s} | {m} | {c['status']}: {reason} | | | | | |")
+        continue
+    print(f"| {a} | {s} | {m} | ok | {fmt(c['flops_per_device'])} | "
+          f"{fmt(c['bytes_accessed_per_device'])} | "
+          f"{fmt(c['collectives_scaled']['wire_bytes'])} | "
+          f"{fmt(c['memory']['temp_bytes'])} | {c['compile_sec']} |")
+
+print()
+print("## roofline table")
+print("| arch | shape | mesh | compute s | memory s | collective s | dominant | roofline frac | MODEL_FLOPS | MODEL/HLOraw |")
+print("|---|---|---|---|---|---|---|---|---|---|")
+for tag in sorted(rows):
+    if "__opt" in tag or "__g1" in tag:
+        continue
+    r = rows[tag]
+    if r.get("status") != "ok":
+        continue
+    if not r["mesh"].startswith("16x16") or "opt" in r["mesh"] or "g1" in r["mesh"]:
+        continue      # roofline table is single-pod per the brief
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+          f"{fmt(r['t_compute_s'])} | {fmt(r['t_memory_s'])} | "
+          f"{fmt(r['t_collective_s'])} | **{r['dominant']}** | "
+          f"{r['roofline_fraction']:.3f} | {fmt(r['model_flops'])} | "
+          f"{r['flops_ratio_raw']:.2f} |")
+
+print()
+print("## opt variants")
+for tag in sorted(rows):
+    if "__opt" not in tag and "__g1" not in tag:
+        continue
+    r = rows[tag]
+    if r.get("status") != "ok":
+        continue
+    print(f"| {tag} | {fmt(r['t_compute_s'])} | {fmt(r['t_memory_s'])} | "
+          f"{fmt(r['t_collective_s'])} | {r['dominant']} | "
+          f"{r['roofline_fraction']:.3f} |")

@@ -1,0 +1,32 @@
+"""Baseline vs --constrain optimized sweep: aggregate improvement table."""
+import json, glob, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from benchmarks.roofline import roofline_row, load_cells
+
+cells = load_cells()
+print("| arch | shape | wire B/dev base | wire B/dev opt | wire gain | frac base | frac opt |")
+print("|---|---|---|---|---|---|---|")
+gains = []
+for tag in sorted(cells):
+    if not tag.endswith("__opt"):
+        continue
+    base_tag = tag[:-5]
+    if base_tag not in cells:
+        continue
+    b, o = cells[base_tag], cells[tag]
+    if b.get("status") != "ok" or o.get("status") != "ok":
+        continue
+    rb = roofline_row(base_tag, b)
+    ro = roofline_row(tag, o)
+    wb = b["collectives_scaled"]["wire_bytes"]
+    wo = o["collectives_scaled"]["wire_bytes"]
+    gain = wb / max(wo, 1)
+    gains.append(gain)
+    arch, shape = base_tag.split("__")[:2]
+    print(f"| {arch} | {shape} | {wb:.2e} | {wo:.2e} | {gain:.1f}x "
+          f"| {rb['roofline_fraction']:.3f} | {ro['roofline_fraction']:.3f} |")
+if gains:
+    import math
+    geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+    print(f"\ngeomean wire-byte gain over {len(gains)} cells: {geo:.2f}x")
