@@ -1,0 +1,60 @@
+"""Host-sync microbench: fused (device-resident) vs host-loop engine.
+
+The paper's §3 design point is that the Held-Karp frontier never leaves the
+GPU; the cost of not doing that is kernel-dispatch serialisation.  This
+bench quantifies it on the Table 1 instances: for each graph it runs the
+full iterative-deepening solve under both engines and reports wall-clock,
+jitted-program dispatches, and blocking device→host transfers (counted by
+``repro.core.engine.COUNTERS``).
+
+    python -m benchmarks.engine_sync            # fast suite
+    python -m benchmarks.engine_sync --full
+"""
+from __future__ import annotations
+
+from repro.core import engine as engine_lib
+from repro.core import solver
+
+from .common import SUITE_FAST, SUITE_FULL, Timer, emit, get_instance
+
+
+def run(full: bool = False, cap: int = 1 << 18, block: int = 1 << 10):
+    suite = SUITE_FULL if full else SUITE_FAST
+    rows = []
+    header = (f"{'instance':<12} {'engine':<6} {'tw':>3} {'time_s':>8} "
+              f"{'dispatches':>10} {'host_syncs':>10}")
+    print(header, flush=True)
+    for key, want in suite:
+        g = get_instance(key)
+        per_engine = {}
+        for engine in ("host", "fused"):
+            engine_lib.reset_counters()
+            with Timer() as t:
+                res = solver.solve(g, cap=cap, block=block, engine=engine)
+            c = dict(engine_lib.COUNTERS)
+            ok = (want is None) or (res.width == want)
+            per_engine[engine] = (res, c, t.seconds, ok)
+            rows.append((key, engine, res.width, t.seconds,
+                         c["dispatches"], c["host_syncs"], ok))
+            print(f"{key:<12} {engine:<6} {res.width:>3} {t.seconds:>8.2f} "
+                  f"{c['dispatches']:>10} {c['host_syncs']:>10}", flush=True)
+            emit(f"engine_sync/{key}/{engine}", t.seconds,
+                 f"tw={res.width};dispatches={c['dispatches']};"
+                 f"host_syncs={c['host_syncs']};expected_ok={ok}")
+        (rh, ch, th, _), (rf, cf, tf, _) = (per_engine["host"],
+                                            per_engine["fused"])
+        assert rh.width == rf.width, (key, rh.width, rf.width)
+        assert rh.expanded == rf.expanded, (key, rh.expanded, rf.expanded)
+        speedup = th / max(tf, 1e-9)
+        sync_ratio = ch["host_syncs"] / max(cf["host_syncs"], 1)
+        emit(f"engine_sync/{key}/summary", tf,
+             f"speedup={speedup:.2f}x;sync_reduction={sync_ratio:.0f}x")
+        print(f"{key:<12} -> speedup {speedup:.2f}x, "
+              f"{ch['host_syncs']} -> {cf['host_syncs']} syncs "
+              f"({sync_ratio:.0f}x fewer)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

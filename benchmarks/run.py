@@ -19,6 +19,11 @@ def main() -> None:
     from . import table1_general
     table1_general.run(full=full)
 
+    print("# engine_sync: fused vs host-loop engine (dispatches + syncs)",
+          flush=True)
+    from . import engine_sync
+    engine_sync.run(full=full)
+
     print("# table2: work-size x memory sweep (paper Tables 2/3)",
           flush=True)
     from . import table2_worksize

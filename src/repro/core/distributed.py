@@ -36,11 +36,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from . import bitset, bloom, bounds, dedup, expand
+from repro.utils import compat
+
+from . import bitset, bloom, bounds, dedup
+from . import engine as engine_lib
 from . import preprocess as preprocess_lib
-from . import mmw as mmw_lib
 from .graph import Graph
 from .solver import SolveResult
 
@@ -52,51 +53,25 @@ def make_solver_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("data",))
 
 
-def _next_pow2(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
-
-
 # ------------------------------------------------------------ device-local fn
 
 def _local_expand(adj, states, count, k, allowed, *, n, cap_local, block,
-                  n_chunks, use_mmw, schedule, impl):
-    """Expand up to n_chunks*block local states; returns (buf, count, drops).
+                  use_mmw, schedule, impl):
+    """Expand the local states in block chunks; returns (buf, count, drops).
 
-    Pure per-device computation (no collectives) — identical math to the
-    single-device ``_chunk_step`` path.
+    Pure per-device computation (no collectives) — the shared
+    ``engine.chunk_sweep`` (identical math to the single-device path),
+    bound by the device-resident local count: no host participation, no
+    wasted chunks, and one compiled program regardless of frontier size
+    (the old ``lax.scan`` needed a host sync per level to pick its trip
+    count, and a recompile per trip-count bucket).  Cross-chunk dedup is
+    deferred to the owner device after routing.
     """
-    w = adj.shape[-1]
-
-    def chunk_body(carry, c):
-        out, ocount, dropped = carry
-        lo = c * block
-        st = jax.lax.dynamic_slice(states, (lo, 0), (block, w))
-        valid = (jnp.arange(block, dtype=jnp.int32) + lo) < count
-        children, feas, _deg, reach = expand.expand_block(
-            adj, st, valid, k, allowed, n, schedule=schedule, impl=impl)
-        if use_mmw:
-            lbs = jax.vmap(lambda r, s: mmw_lib.mmw_bound(r, s, k, n))(
-                reach, st)
-            feas = feas & (lbs <= k)[:, None]
-        flat = children.reshape(block * n, w)
-        fmask = feas.reshape(block * n)
-        skeys, svalid = dedup.sort_states(flat, fmask)
-        keep = dedup.unique_mask(skeys, svalid)
-        pos = ocount + jnp.cumsum(keep.astype(jnp.int32)) - 1
-        write = keep & (pos < cap_local)
-        out = out.at[jnp.where(write, pos, cap_local)].set(skeys, mode="drop")
-        n_keep = jnp.sum(keep.astype(jnp.int32))
-        written = jnp.minimum(n_keep, jnp.maximum(0, cap_local - ocount))
-        return (out, ocount + written, dropped + (n_keep - written)), None
-
-    init = (jnp.zeros((cap_local, w), dtype=U32),
-            jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
-    (out, ocount, dropped), _ = jax.lax.scan(
-        chunk_body, init, jnp.arange(n_chunks, dtype=jnp.int32))
-    return out, ocount, dropped
+    return engine_lib.chunk_sweep(
+        adj, allowed, k, states, count, block, n=n, cap=cap_local,
+        mode="sort", use_mmw=use_mmw, m_bits=1, k_hashes=1,
+        schedule=schedule, impl=impl, use_simplicial=False,
+        max_chunks=-(-cap_local // block), cross_dedup=False)
 
 
 def _build_buckets(rows, count, ndev, cap_send, w):
@@ -126,8 +101,11 @@ def _build_buckets(rows, count, ndev, cap_send, w):
     return send.reshape(ndev, cap_send, w), send_counts, dropped
 
 
-def _make_dist_level(mesh, *, n, cap_local, block, n_chunks, cap_send,
-                     use_mmw, schedule, impl):
+def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
+                         use_mmw, schedule, impl):
+    """The per-level SPMD program: local expand -> ownership all_to_all ->
+    owner dedup.  Returned un-jitted so it can be embedded either in a
+    host-driven per-level jit or inside the fused while_loop."""
     ndev = mesh.devices.size
     axes = tuple(mesh.axis_names)
 
@@ -136,8 +114,7 @@ def _make_dist_level(mesh, *, n, cap_local, block, n_chunks, cap_send,
         w = adj.shape[-1]
         out, ocount, drop_local = _local_expand(
             adj, states, count[0], k, allowed, n=n, cap_local=cap_local,
-            block=block, n_chunks=n_chunks, use_mmw=use_mmw,
-            schedule=schedule, impl=impl)
+            block=block, use_mmw=use_mmw, schedule=schedule, impl=impl)
         # ownership routing (all_to_all over the flattened device axes)
         send, send_counts, drop_send = _build_buckets(
             out, ocount, ndev, cap_send, w)
@@ -153,12 +130,53 @@ def _make_dist_level(mesh, *, n, cap_local, block, n_chunks, cap_send,
         return buf, cnt[None].astype(jnp.int32), dropped.astype(jnp.int32)
 
     spec_sharded = P(axes)
-    fn = shard_map(
-        local_fn, mesh=mesh,
+    return compat.shard_map(
+        local_fn, mesh,
         in_specs=(P(), spec_sharded, spec_sharded, P(), P()),
-        out_specs=(spec_sharded, spec_sharded, spec_sharded),
-        check_rep=False)
-    return jax.jit(fn)
+        out_specs=(spec_sharded, spec_sharded, spec_sharded))
+
+
+_DIST_FN_CACHE: dict = {}
+
+
+def _dist_fns(mesh, *, n, cap_local, block, cap_send, use_mmw, schedule,
+              impl):
+    """(jitted per-level fn, jitted fused decide fn) for one config.
+
+    Module-level cache: jit compilation caches key on function identity, so
+    rebuilding the closures per ``decide`` call (the old behaviour) forced
+    a retrace for every k of the iterative deepening."""
+    key = (mesh, n, cap_local, block, cap_send, use_mmw, schedule, impl)
+    if key in _DIST_FN_CACHE:
+        return _DIST_FN_CACHE[key]
+
+    level_sm = _make_level_shardmap(
+        mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
+        use_mmw=use_mmw, schedule=schedule, impl=impl)
+
+    def fused_decide_fn(adj, states, counts, k, target, allowed):
+        """Whole decide loop device-resident: mirrors engine._fused_decide
+        with the level step replaced by the sharded SPMD program."""
+        zero = jnp.asarray(0, jnp.int32)
+
+        def cond(c):
+            _states, counts, level, _expanded, _dropped = c
+            return (level < target) & (jnp.sum(counts) > 0)
+
+        def body(c):
+            states, counts, level, expanded, dropped = c
+            expanded = expanded + jnp.sum(counts)
+            states, counts, drop = level_sm(adj, states, counts, k, allowed)
+            return (states, counts, level + 1, expanded,
+                    dropped + jnp.sum(drop))
+
+        _states, counts, _level, expanded, dropped = jax.lax.while_loop(
+            cond, body, (states, counts, zero, zero, zero))
+        return jnp.sum(counts) > 0, dropped, expanded
+
+    fns = (jax.jit(level_sm), jax.jit(fused_decide_fn))
+    _DIST_FN_CACHE[key] = fns
+    return fns
 
 
 # ------------------------------------------------------------------- driver
@@ -186,9 +204,16 @@ def _init_frontier(mesh, cap_local, w):
 def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
                        cap_local: int, block: int, use_mmw: bool = False,
                        schedule: str = "doubling", impl: str = "jax",
-                       checkpoint_cb=None, resume: Optional[dict] = None):
-    """Distributed decision: is tw(g) <= k?  Mirrors solver.decide."""
+                       checkpoint_cb=None, resume: Optional[dict] = None,
+                       engine: str = "fused"):
+    """Distributed decision: is tw(g) <= k?  Mirrors solver.decide.
+
+    ``engine="fused"`` runs the whole level loop as one device-resident
+    program (the sharded analogue of ``engine.fused_decide``): zero host
+    syncs until the verdict.  Per-level checkpointing needs host snapshots,
+    so a ``checkpoint_cb`` forces the host loop."""
     n = g.n
+    block = engine_lib.validate_geometry(cap_local, block)
     target = n - max(k + 1, len(clique))
     if target <= 0:
         return True, False, 0
@@ -209,23 +234,30 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
         expanded = int(resume.get("expanded", 0))
         inexact = bool(resume.get("inexact", False))
 
-    level_fns: dict = {}
+    level_fn, fused_fn = _dist_fns(
+        mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
+        use_mmw=use_mmw, schedule=schedule, impl=impl)
     kdev = jnp.asarray(k, jnp.int32)
+
+    if engine == "fused" and checkpoint_cb is None:
+        tdev = jnp.asarray(target - start_level, jnp.int32)
+        feas_dev, drop_dev, exp_dev = fused_fn(
+            adj_dev, states, counts, kdev, tdev, allowed_dev)
+        engine_lib.count(dispatches=1)
+        feas, drop, exp = jax.device_get((feas_dev, drop_dev, exp_dev))
+        engine_lib.count(host_syncs=1)
+        return bool(feas), inexact or int(drop) > 0, expanded + int(exp)
+
     for level in range(start_level, target):
         counts_h = np.asarray(counts)
+        engine_lib.count(host_syncs=1)
         expanded += int(counts_h.sum())              # states popped this level
-        maxcount = int(counts_h.max())
-        n_chunks = _next_pow2(max(1, -(-maxcount // block)))
-        key = n_chunks
-        if key not in level_fns:
-            level_fns[key] = _make_dist_level(
-                mesh, n=n, cap_local=cap_local, block=block,
-                n_chunks=n_chunks, cap_send=cap_send, use_mmw=use_mmw,
-                schedule=schedule, impl=impl)
-        states, counts, dropped = level_fns[key](
+        states, counts, dropped = level_fn(
             adj_dev, states, counts, kdev, allowed_dev)
+        engine_lib.count(dispatches=1)
         inexact |= int(jnp.sum(dropped)) > 0
         total = int(jnp.sum(counts))
+        engine_lib.count(host_syncs=2)
         if checkpoint_cb is not None:
             checkpoint_cb(dict(level=level + 1, k=k, expanded=expanded,
                                inexact=inexact,
@@ -267,7 +299,8 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                       schedule: str = "doubling", impl: str = "jax",
                       use_clique: bool = True, use_paths: bool = True,
                       use_preprocess: bool = True,
-                      checkpoint_cb=None, verbose: bool = False) -> SolveResult:
+                      checkpoint_cb=None, verbose: bool = False,
+                      engine: str = "fused") -> SolveResult:
     """Distributed analogue of solver.solve (width only, no reconstruction)."""
     t0 = time.time()
     if g.n == 0:
@@ -300,7 +333,7 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
             feasible, inexact, exp = decide_distributed(
                 gk, k, clique, mesh, cap_local=cap_local, block=block,
                 use_mmw=use_mmw, schedule=schedule, impl=impl,
-                checkpoint_cb=checkpoint_cb)
+                checkpoint_cb=checkpoint_cb, engine=engine)
             expanded += exp
             any_inexact |= inexact
             if verbose:

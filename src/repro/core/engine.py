@@ -1,0 +1,288 @@
+"""Device-resident wavefront engine: the whole ``decide`` loop in one jit.
+
+The paper's speedup (§3, Listing 1) comes from never letting the Held-Karp
+frontier leave the GPU; the host only learns the final verdict.  The
+original ``solver.decide`` instead synchronised twice per level (reading
+``fr.count`` to size the chunk loop and to test emptiness), serialising
+kernel dispatch exactly the way the persistent-worklist literature warns
+against.  This module fuses both loops:
+
+  * the per-level loop becomes an outer ``lax.while_loop`` whose carry is
+    the ``Frontier`` pytree plus (level, expanded, dropped) counters, with
+    the paper's empty-frontier early exit as part of the loop condition;
+  * the per-chunk loop becomes an inner ``lax.while_loop`` over fixed-shape
+    ``block``-row slices of the frontier buffer, with the trip count bound
+    by the *device-resident* count (no host round-trip, no wasted chunks);
+  * expansion, simplicial collapse, MMW pruning, sort/Bloom dedup and
+    overflow accounting all happen inside the loop body via
+    ``expand_chunk`` — the single shared implementation of the paper's
+    Listing-1 inner loop, also used by the host-loop path and the
+    distributed solver.
+
+One ``fused_decide`` call therefore issues exactly one dispatch and one
+device→host transfer per k, versus O(levels × chunks) for the host loop.
+The host path survives as ``engine="host"`` (reconstruction needs per-level
+snapshots, checkpointing needs per-level host callbacks).
+
+``COUNTERS`` tracks dispatches and host syncs for both engines so
+``benchmarks/engine_sync.py`` can report the difference on the Table 1
+instances.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import bloom, dedup, expand, frontier as frontier_lib
+from . import mmw as mmw_lib
+
+U32 = jnp.uint32
+
+# dispatch/sync accounting (host-side, zero overhead on device):
+#   dispatches — jitted program launches issued by a solver path
+#   host_syncs — device->host scalar/buffer reads that block on the device
+COUNTERS = {"dispatches": 0, "host_syncs": 0}
+
+
+def reset_counters():
+    COUNTERS["dispatches"] = 0
+    COUNTERS["host_syncs"] = 0
+
+
+def count(dispatches: int = 0, host_syncs: int = 0):
+    COUNTERS["dispatches"] += dispatches
+    COUNTERS["host_syncs"] += host_syncs
+
+
+def validate_geometry(cap: int, block: int, *, adaptive: bool = False) -> int:
+    """Fail fast on buffer geometry the chunk slicer cannot walk cleanly.
+
+    ``dynamic_slice`` clamps out-of-range starts, so a block that does not
+    divide the buffer capacity would silently re-expand earlier rows under
+    a wrong valid mask.  ``adaptive=True`` checks every block size the host
+    loop's per-level adaptation (``max(32, min(block, 2^j))``) can pick.
+    Returns the (possibly clamped) block.
+    """
+    block = min(block, cap)
+    sizes = ({max(32, min(block, 1 << j)) for j in range(26)}
+             if adaptive else {block})
+    bad = sorted(b for b in sizes if cap % b)
+    if bad:
+        raise ValueError(
+            f"block ({bad[0]}{' via adaptive sizing' if adaptive else ''}) "
+            f"must divide cap ({cap}): the chunk slicer walks the buffer "
+            "in block strides. Use a power-of-two cap >= block")
+    return block
+
+
+# ------------------------------------------------------------- chunk kernel
+
+def expand_chunk(adj, states_chunk, chunk_valid, k, out, ocount, dropped,
+                 filt, allowed, *, n, cap, block, mode, use_mmw, m_bits,
+                 k_hashes, schedule, impl, use_simplicial=False):
+    """Expand one chunk of states and append deduped children to ``out``.
+
+    The paper's Listing-1 inner loop in one place: called from the host
+    chunk loop (``solver._chunk_step``), from the fused while_loop below,
+    and from the distributed per-device expansion.  Pure function of its
+    arguments — safe inside any jit / while_loop / shard_map context.
+    """
+    w = adj.shape[-1]
+    children, feas, _deg, reach = expand.expand_block(
+        adj, states_chunk, chunk_valid, k, allowed, n, schedule=schedule,
+        impl=impl)
+
+    if use_simplicial:
+        simp = expand.simplicial_mask(adj, states_chunk, reach, feas, n)
+        feas = expand.collapse_simplicial(feas, simp)
+
+    if use_mmw:
+        lbs = jax.vmap(lambda r, s: mmw_lib.mmw_bound(r, s, k, n))(
+            reach, states_chunk)
+        feas = feas & (lbs <= k)[:, None]
+
+    flat = children.reshape(block * n, w)
+    fmask = feas.reshape(block * n)
+
+    # intra-chunk exact dedup (paper: mutex-striped atomic inserts)
+    skeys, svalid = dedup.sort_states(flat, fmask)
+    keep = dedup.unique_mask(skeys, svalid)
+
+    if mode == "bloom":
+        keep, filt = bloom.query_and_insert(filt, skeys, keep, m_bits,
+                                            k_hashes)
+
+    pos = ocount + jnp.cumsum(keep.astype(jnp.int32)) - 1
+    write = keep & (pos < cap)
+    out = out.at[jnp.where(write, pos, cap)].set(skeys, mode="drop")
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    written = jnp.minimum(n_keep, jnp.maximum(0, cap - ocount))
+    dropped = dropped + (n_keep - written)
+    ocount = ocount + written
+    return out, ocount, dropped, filt
+
+
+# ------------------------------------------------------------- fused level
+
+# below this frontier size a level runs as one narrow chunk instead of a
+# full-``block``-wide one — the device analogue of the host loop's adaptive
+# block (early levels have tiny frontiers; a fixed wide block pays full
+# padding cost per level)
+SMALL_BLOCK = 128
+
+
+def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
+                use_mmw, m_bits, k_hashes, schedule, impl, use_simplicial,
+                max_chunks=None, cross_dedup=True):
+    """Expand ``count_`` rows of ``states`` in ``blk``-row chunks, on device.
+
+    The data-dependent chunk loop shared by the fused level step and the
+    distributed per-device expansion (which passes ``cross_dedup=False`` —
+    its cross-chunk dedup happens at the owner after routing — and a
+    ``max_chunks`` bound from its local capacity).  Returns
+    (out, ocount, dropped)."""
+    w = adj.shape[-1]
+    zero = jnp.asarray(0, jnp.int32)
+    out = jnp.zeros((cap, w), dtype=U32)
+    filt = bloom.make_filter(m_bits if mode == "bloom" else 1)
+
+    def chunk_cond(c):
+        more = c[0] * blk < count_
+        if max_chunks is not None:
+            more = more & (c[0] < max_chunks)
+        return more
+
+    def chunk_body(c):
+        ci, out, ocount, dropped, filt = c
+        lo = ci * blk
+        states_chunk = jax.lax.dynamic_slice(states, (lo, zero), (blk, w))
+        chunk_valid = (jnp.arange(blk, dtype=jnp.int32) + lo) < count_
+        out, ocount, dropped, filt = expand_chunk(
+            adj, states_chunk, chunk_valid, k, out, ocount, dropped, filt,
+            allowed, n=n, cap=cap, block=blk, mode=mode, use_mmw=use_mmw,
+            m_bits=m_bits, k_hashes=k_hashes, schedule=schedule, impl=impl,
+            use_simplicial=use_simplicial)
+        return ci + 1, out, ocount, dropped, filt
+
+    _, out, ocount, dropped, _ = jax.lax.while_loop(
+        chunk_cond, chunk_body, (zero, out, zero, zero, filt))
+
+    if mode == "sort" and cross_dedup:
+        # cross-chunk exact dedup, only when the level actually spanned
+        # multiple chunks (single-chunk output is already sorted-unique);
+        # the full-``cap`` sort is the priciest op in the level, so the
+        # gate matters.  Drop-neutral: n_keep <= ocount <= cap, drop2 == 0.
+        def _cross_dedup():
+            valid = jnp.arange(cap, dtype=jnp.int32) < ocount
+            buf, written, drop2 = dedup.dedup_compact(out, valid, cap)
+            return buf, written, dropped + drop2
+
+        out, ocount, dropped = jax.lax.cond(
+            count_ > blk, _cross_dedup, lambda: (out, ocount, dropped))
+    return out, ocount, dropped
+
+
+def _level_step(adj, allowed, k, fr, *, n, cap, block, mode, use_mmw,
+                m_bits, k_hashes, schedule, impl, use_simplicial):
+    """One wavefront level, fully on device.  Traced inside the while body.
+
+    Chunk trip count is ``ceil(count / block)`` with the count read from the
+    carried frontier — a data-dependent while_loop, so small frontiers pay
+    for one chunk, not ``cap / block``.  Levels whose whole frontier fits in
+    ``SMALL_BLOCK`` rows take a narrow single-chunk branch instead
+    (``lax.cond`` — both branches compiled once, runtime picks per level).
+    """
+    small = min(block, SMALL_BLOCK)
+    count_ = fr.count
+    kwargs = dict(n=n, cap=cap, mode=mode, use_mmw=use_mmw, m_bits=m_bits,
+                  k_hashes=k_hashes, schedule=schedule, impl=impl,
+                  use_simplicial=use_simplicial)
+
+    if small == block:
+        out, ocount, dropped = chunk_sweep(adj, allowed, k, fr.states,
+                                           count_, block, **kwargs)
+    else:
+        out, ocount, dropped = jax.lax.cond(
+            count_ <= small,
+            lambda: chunk_sweep(adj, allowed, k, fr.states, count_, small,
+                                **kwargs),
+            lambda: chunk_sweep(adj, allowed, k, fr.states, count_, block,
+                                **kwargs))
+
+    return frontier_lib.Frontier(out, ocount.astype(jnp.int32),
+                                 dropped.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
+                     "k_hashes", "schedule", "impl", "use_simplicial"))
+def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
+                  use_mmw, m_bits, k_hashes, schedule, impl,
+                  use_simplicial):
+    """Run up to ``target`` wavefront levels; stop early on emptiness.
+
+    Returns (frontier, levels_run, expanded, dropped_total) — all on
+    device.  Feasibility is ``frontier.count > 0`` (the loop only stops
+    short of ``target`` when a level produced no states).
+    """
+    zero = jnp.asarray(0, jnp.int32)
+
+    def cond(carry):
+        fr, level, _expanded, _dropped = carry
+        return (level < target) & (fr.count > 0)
+
+    def body(carry):
+        fr, level, expanded, dropped = carry
+        expanded = expanded + fr.count
+        new_fr = _level_step(adj, allowed, k, fr, n=n, cap=cap, block=block,
+                             mode=mode, use_mmw=use_mmw, m_bits=m_bits,
+                             k_hashes=k_hashes, schedule=schedule,
+                             impl=impl, use_simplicial=use_simplicial)
+        return new_fr, level + 1, expanded, dropped + new_fr.dropped
+
+    fr, level, expanded, dropped = jax.lax.while_loop(
+        cond, body, (fr, zero, zero, zero))
+    return fr, level, expanded, dropped
+
+
+def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
+                 mode, use_mmw, m_bits, k_hashes, schedule, impl,
+                 use_simplicial=False, fr=None, max_levels=None):
+    """Host entry point: one dispatch, one sync, full verdict.
+
+    ``fr`` seeds the frontier (defaults to the DP root {∅}); ``max_levels``
+    truncates the run (used by the parity tests to compare intermediate
+    frontiers against the host loop level by level).
+
+    Returns (feasible, inexact, expanded, frontier_host) where
+    ``frontier_host`` is the final (states, count, dropped_total) pulled to
+    the host in the same single transfer as the verdict.
+    """
+    block = validate_geometry(cap, block)
+    w = adj_dev.shape[-1]
+    if fr is None:
+        fr = frontier_lib.empty_frontier(cap, w)
+    levels = target if max_levels is None else min(target, max_levels)
+    kdev = jnp.asarray(k, dtype=jnp.int32)
+    tdev = jnp.asarray(levels, dtype=jnp.int32)
+
+    fr, level, expanded, dropped = _fused_decide(
+        adj_dev, allowed_dev, kdev, tdev, fr, n=n, cap=cap, block=block,
+        mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+        schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+    count(dispatches=1)
+
+    states_h, count_h, expanded_h, dropped_h = jax.device_get(
+        (fr.states, fr.count, expanded, dropped))
+    count(host_syncs=1)
+
+    feasible = int(count_h) > 0
+    inexact = int(dropped_h) > 0
+    fr_host = frontier_lib.Frontier(np.asarray(states_h),
+                                    np.asarray(count_h),
+                                    np.asarray(dropped_h))
+    return feasible, inexact, int(expanded_h), fr_host

@@ -5,15 +5,22 @@ discards overflow (marking the run inexact).  We keep exactly those
 semantics per device: a frontier is a fixed ``(cap, W)`` uint32 buffer, a
 count, and a drop counter.  Fixed shapes keep every level step jit-stable;
 capacity scales with the mesh in the distributed solver.
+
+``Frontier`` is registered as a jax pytree so the device-resident engine
+(``repro.core.engine``) can carry it straight through ``lax.while_loop`` /
+``lax.scan`` without unpacking — the whole ``decide`` recursion then runs
+as one compiled program with the frontier never leaving the device.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Frontier:
     states: jnp.ndarray      # (cap, W) uint32
@@ -27,6 +34,15 @@ class Frontier:
     @property
     def w(self) -> int:
         return self.states.shape[1]
+
+    # pytree protocol: all three fields are traced data (no static aux) so
+    # a Frontier is a legal while_loop carry / scan state
+    def tree_flatten(self):
+        return (self.states, self.count, self.dropped), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
 
 
 def empty_frontier(cap: int, w: int) -> Frontier:

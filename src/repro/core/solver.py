@@ -28,8 +28,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import bitset, bloom, bounds, dedup, expand, frontier as frontier_lib
-from . import mmw as mmw_lib
+from . import bitset, bloom, bounds, dedup, engine as engine_lib
+from . import frontier as frontier_lib
+from . import expand
 from . import preprocess as preprocess_lib
 from .graph import Graph
 
@@ -47,40 +48,16 @@ U32 = jnp.uint32
 def _chunk_step(adj, states_chunk, chunk_valid, k, out, ocount, dropped,
                 filt, allowed, *, n, cap, block, mode, use_mmw, m_bits,
                 k_hashes, schedule, impl, use_simplicial=False):
-    """Expand one chunk of states and append deduped children to ``out``."""
-    w = adj.shape[-1]
-    children, feas, _deg, reach = expand.expand_block(
-        adj, states_chunk, chunk_valid, k, allowed, n, schedule=schedule,
-        impl=impl)
+    """Expand one chunk of states and append deduped children to ``out``.
 
-    if use_simplicial:
-        simp = expand.simplicial_mask(adj, states_chunk, reach, feas, n)
-        feas = expand.collapse_simplicial(feas, simp)
-
-    if use_mmw:
-        lbs = jax.vmap(lambda r, s: mmw_lib.mmw_bound(r, s, k, n))(
-            reach, states_chunk)
-        feas = feas & (lbs <= k)[:, None]
-
-    flat = children.reshape(block * n, w)
-    fmask = feas.reshape(block * n)
-
-    # intra-chunk exact dedup (paper: mutex-striped atomic inserts)
-    skeys, svalid = dedup.sort_states(flat, fmask)
-    keep = dedup.unique_mask(skeys, svalid)
-
-    if mode == "bloom":
-        keep, filt = bloom.query_and_insert(filt, skeys, keep, m_bits,
-                                            k_hashes)
-
-    pos = ocount + jnp.cumsum(keep.astype(jnp.int32)) - 1
-    write = keep & (pos < cap)
-    out = out.at[jnp.where(write, pos, cap)].set(skeys, mode="drop")
-    n_keep = jnp.sum(keep.astype(jnp.int32))
-    written = jnp.minimum(n_keep, jnp.maximum(0, cap - ocount))
-    dropped = dropped + (n_keep - written)
-    ocount = ocount + written
-    return out, ocount, dropped, filt
+    Thin jitted wrapper over ``engine.expand_chunk`` — the single shared
+    implementation of the Listing-1 inner loop (also used by the fused
+    device-resident engine and the distributed solver)."""
+    return engine_lib.expand_chunk(
+        adj, states_chunk, chunk_valid, k, out, ocount, dropped, filt,
+        allowed, n=n, cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+        m_bits=m_bits, k_hashes=k_hashes, schedule=schedule, impl=impl,
+        use_simplicial=use_simplicial)
 
 
 @functools.partial(jax.jit, static_argnames=("cap",), donate_argnums=(0,))
@@ -109,14 +86,22 @@ def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
               *, n: int, cap: int, block: int, mode: str, use_mmw: bool,
               m_bits: int, k_hashes: int, schedule: str, impl: str = "jax",
               use_simplicial: bool = False):
-    """One wavefront level: expand all states in ``fr`` into a new frontier."""
+    """One wavefront level: expand all states in ``fr`` into a new frontier.
+
+    Host-loop engine: syncs on ``fr.count`` to size the chunk loop (the
+    fused engine in ``core.engine`` keeps this loop on device)."""
     w = fr.w
     count = int(fr.count)
+    engine_lib.count(host_syncs=1)
     # adaptive block: early levels / small instances have tiny frontiers —
     # a fixed 1024-row block pays full padding cost per chunk (§Perf iter).
     # Rounding to powers of two bounds the number of jit signatures at
     # log2(block).
     block = max(32, min(block, _pow2_at_least(max(count, 1))))
+    if cap % block:
+        # dynamic_slice clamps out-of-range starts, so a non-dividing block
+        # would silently re-expand earlier rows with the wrong valid mask
+        raise ValueError(f"block ({block}) must divide cap ({cap})")
     out = jnp.zeros((cap, w), dtype=U32)
     ocount = jnp.asarray(0, dtype=jnp.int32)
     dropped = jnp.asarray(0, dtype=jnp.int32)
@@ -133,15 +118,18 @@ def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
             filt, allowed_dev, n=n, cap=cap, block=block, mode=mode,
             use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
             schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+        engine_lib.count(dispatches=1)
 
     if mode == "sort" and n_chunks > 1:
         out, ocount, drop2 = _final_dedup(out, ocount, cap)
         # cross-chunk duplicates removed; drops before dedup stay counted
         dropped = dropped + drop2
+        engine_lib.count(dispatches=1)
 
     new_fr = frontier_lib.Frontier(out, ocount, dropped)
     stats = LevelStats(expanded=count, generated=int(ocount),
                        dropped=int(dropped))
+    engine_lib.count(host_syncs=2)
     return new_fr, stats
 
 
@@ -158,8 +146,15 @@ class DecideResult:
 def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
            mode: str, use_mmw: bool, m_bits: int, k_hashes: int,
            schedule: str, impl: str = "jax", use_simplicial: bool = False,
-           keep_levels: bool = False) -> DecideResult:
-    """Is tw(g) <= k?  (Monte-Carlo 'no' possible in bloom mode / overflow.)"""
+           keep_levels: bool = False,
+           engine: str = "fused") -> DecideResult:
+    """Is tw(g) <= k?  (Monte-Carlo 'no' possible in bloom mode / overflow.)
+
+    ``engine="fused"`` runs the whole level/chunk recursion as one compiled
+    program on the device (one dispatch, one sync — §3's design point);
+    ``engine="host"`` drives the level loop from the host, which is the
+    only engine that can snapshot per-level frontiers (``keep_levels``,
+    needed for order reconstruction)."""
     n = g.n
     target = n - max(k + 1, len(clique))
     if target <= 0:
@@ -171,6 +166,22 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
     for v in clique:
         allowed[v >> 5] &= ~np.uint32(np.uint32(1) << np.uint32(v & 31))
     allowed_dev = jnp.asarray(allowed)
+
+    if keep_levels:
+        engine = "host"            # per-level snapshots need the host loop
+    if engine not in ("host", "fused"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "host":
+        # fail before any level runs, like the fused engine does — not at
+        # the first level whose adapted block happens not to divide cap
+        engine_lib.validate_geometry(cap, block, adaptive=True)
+
+    if engine == "fused":
+        feasible, inexact, expanded, _fr = engine_lib.fused_decide(
+            adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
+            mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+            schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+        return DecideResult(feasible, inexact, expanded, None)
 
     fr = frontier_lib.empty_frontier(cap, w)
     expanded = 0
@@ -187,6 +198,7 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
         inexact |= stats.dropped > 0
         if keep_levels:
             levels.append(frontier_lib.to_host(fr))
+        engine_lib.count(host_syncs=1)
         if int(fr.count) == 0:
             return DecideResult(False, inexact, expanded, levels)
     return DecideResult(True, inexact, expanded, levels)
@@ -257,7 +269,8 @@ def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
                 m_bits: int, k_hashes: int, schedule: str, use_clique: bool,
                 use_paths: bool, reconstruct: bool, start_k: Optional[int],
                 verbose: bool, impl: str = "jax",
-                use_simplicial: bool = False) -> SolveResult:
+                use_simplicial: bool = False,
+                engine: str = "fused") -> SolveResult:
     t0 = time.time()
     if g.n <= 1:
         return SolveResult(0, True, 0, 0, 0, time.time() - t0, list(range(g.n)), {})
@@ -280,7 +293,7 @@ def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
                      use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
                      schedule=schedule, impl=impl,
                      use_simplicial=use_simplicial,
-                     keep_levels=reconstruct)
+                     keep_levels=reconstruct, engine=engine)
         expanded_total += res.expanded
         per_k[k] = {"feasible": res.feasible, "inexact": res.inexact,
                     "expanded": res.expanded}
@@ -308,8 +321,13 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
           use_clique: bool = True, use_paths: bool = True,
           use_preprocess: bool = True, reconstruct: bool = False,
           start_k: Optional[int] = None, verbose: bool = False,
-          impl: str = "jax", use_simplicial: bool = False) -> SolveResult:
-    """Compute the treewidth of ``g``.  See module docstring for modes."""
+          impl: str = "jax", use_simplicial: bool = False,
+          engine: str = "fused") -> SolveResult:
+    """Compute the treewidth of ``g``.  See module docstring for modes.
+
+    ``engine`` selects the wavefront driver: "fused" (device-resident
+    ``lax.while_loop``, one dispatch per k) or "host" (per-level host loop;
+    forced automatically where reconstruction needs level snapshots)."""
     t0 = time.time()
     if impl == "pallas" and use_mmw:
         raise ValueError("impl='pallas' does not produce the reach matrix "
@@ -322,7 +340,7 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
                           use_clique=use_clique, use_paths=use_paths,
                           reconstruct=reconstruct, start_k=start_k,
                           verbose=verbose, impl=impl,
-                          use_simplicial=use_simplicial)
+                          use_simplicial=use_simplicial, engine=engine)
         return res
 
     pre = preprocess_lib.preprocess(g)
@@ -337,7 +355,7 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
                           schedule=schedule, use_clique=use_clique,
                           use_paths=use_paths, reconstruct=False,
                           start_k=start_k, verbose=verbose, impl=impl,
-                          use_simplicial=use_simplicial)
+                          use_simplicial=use_simplicial, engine=engine)
         width = max(width, res.width)
         exact &= res.exact
         expanded += res.expanded

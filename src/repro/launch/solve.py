@@ -20,6 +20,9 @@ def main(argv=None):
     ap.add_argument("--cap", type=int, default=1 << 18)
     ap.add_argument("--block", type=int, default=1 << 10)
     ap.add_argument("--mode", default="sort", choices=["sort", "bloom"])
+    ap.add_argument("--engine", default="fused", choices=["fused", "host"],
+                    help="wavefront driver: device-resident while_loop "
+                         "(one dispatch per k) or per-level host loop")
     ap.add_argument("--mmw", action="store_true")
     ap.add_argument("--impl", default="jax", choices=["jax", "pallas"])
     ap.add_argument("--schedule", default="doubling",
@@ -59,14 +62,16 @@ def main(argv=None):
             block=args.block, use_mmw=args.mmw,
             schedule=args.schedule, impl=args.impl,
             use_clique=not args.no_clique, use_paths=not args.no_paths,
-            use_preprocess=not args.no_preprocess, verbose=args.verbose)
+            use_preprocess=not args.no_preprocess, verbose=args.verbose,
+            engine=args.engine)
     else:
         res = solver_lib.solve(
             g, cap=args.cap, block=args.block, mode=args.mode,
             use_mmw=args.mmw, impl=args.impl, schedule=args.schedule,
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess,
-            reconstruct=args.reconstruct, verbose=args.verbose)
+            reconstruct=args.reconstruct, verbose=args.verbose,
+            engine=args.engine)
 
     print(f"[solve] treewidth={res.width} exact={res.exact} "
           f"lb={res.lb} ub={res.ub} states_expanded={res.expanded} "

@@ -285,7 +285,8 @@ def _constrain_dp(x, cfg):
     if x.ndim >= 2 and x.shape[1] == 1:          # decode step
         return x
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.utils import compat
+        mesh = compat.get_abstract_mesh()
         names = getattr(mesh, "axis_names", ()) or ()
         dp = tuple(a for a in ("pod", "data") if a in names)
         if not dp:
@@ -297,6 +298,9 @@ def _constrain_dp(x, cfg):
             return x
         from jax.sharding import PartitionSpec as P
         spec = P(dp, *([None] * (x.ndim - 1)))
+        if isinstance(mesh, jax.sharding.Mesh):
+            # old jax: no ambient-mesh context — bind the mesh explicitly
+            spec = jax.sharding.NamedSharding(mesh, spec)
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:       # noqa: BLE001 — constraint is best-effort
         return x

@@ -11,6 +11,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import causal_lm_loss
 from repro.optim import optimizers as opt_lib
 from repro.sharding import rules as rules_lib
+from repro.utils import compat
 
 
 def init_state(model, key, tcfg):
@@ -105,7 +106,7 @@ def build_train_step(model, tcfg, mesh=None):
                 lambda x: x.reshape((nm, b // nm) + x.shape[1:]), batch)
             # the (B,)->(nm, B/nm) reshape must keep the DP sharding on the
             # inner batch dim, or GSPMD replicates every microbatch slice
-            amesh = jax.sharding.get_abstract_mesh()
+            amesh = compat.get_abstract_mesh()
             if getattr(amesh, "axis_names", None):
                 dp = tuple(a for a in ("pod", "data")
                            if a in amesh.axis_names)
@@ -131,7 +132,7 @@ def build_train_step(model, tcfg, mesh=None):
 
     def _gather_specs():
         """FSDP-free param specs (model axes only) from the ambient mesh."""
-        amesh = jax.sharding.get_abstract_mesh()
+        amesh = compat.get_abstract_mesh()
         if not getattr(amesh, "axis_names", None):
             return None
         gather_rules = dict(rules_lib.DEFAULT_RULES, embed=())
@@ -141,7 +142,9 @@ def build_train_step(model, tcfg, mesh=None):
                 p.shape, p.axes, amesh, gather_rules)), model.spec)
 
     def _fsdp_specs():
-        amesh = jax.sharding.get_abstract_mesh()
+        amesh = compat.get_abstract_mesh()
+        if not getattr(amesh, "axis_names", None):
+            return None
         from repro.models.params import map_spec
         return map_spec(
             lambda p: NamedSharding(amesh, rules_lib.spec_for(
@@ -160,8 +163,9 @@ def build_train_step(model, tcfg, mesh=None):
         grads, metrics = grads_of(params_in, batch)
         if getattr(tcfg, "gather_once", False):
             fs = _fsdp_specs()
-            grads = jax.tree.map(
-                jax.lax.with_sharding_constraint, grads, fs)
+            if fs is not None:
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads, fs)
         grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.grad_clip)
         lr = opt_lib.warmup_cosine(state["step"], peak=tcfg.learning_rate,
                                    warmup=tcfg.warmup_steps,
@@ -215,9 +219,9 @@ def build_compressed_grads(model, tcfg, mesh):
         return g, metrics
 
     pspec = jax.tree.map(lambda _: P(), model.abstract())
-    # jax.shard_map with axis_names restricted to the DP axes leaves the
+    # shard_map with axis_names restricted to the DP axes leaves the
     # remaining mesh axes automatic (TP composes via GSPMD)
-    return jax.shard_map(local, mesh=mesh,
-                         in_specs=(pspec, P(dp)),
-                         out_specs=(pspec, P()),
-                         axis_names=set(dp), check_vma=False)
+    return compat.shard_map(local, mesh=mesh,
+                            in_specs=(pspec, P(dp)),
+                            out_specs=(pspec, P()),
+                            axis_names=set(dp))

@@ -1,0 +1,79 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The repo targets the newer ambient-mesh API (``jax.sharding.set_mesh`` /
+``get_abstract_mesh`` / top-level ``jax.shard_map``); the pinned toolchain
+(jax 0.4.37) predates all three.  Every call site goes through this module
+so the drift is handled in exactly one place:
+
+* ``set_mesh`` / ``get_abstract_mesh`` — on old jax the ambient mesh is a
+  module-level global here.  Callers must treat the result as *maybe None*
+  and guard on ``getattr(mesh, "axis_names", None)`` (they already do: the
+  ambient mesh is a best-effort sharding hint everywhere it is read).
+* ``shard_map`` — maps the new ``axis_names={...}`` (manual axes) kwarg to
+  the old ``auto=frozenset(...)`` complement form.
+* ``cost_analysis_dict`` — ``Compiled.cost_analysis()`` returned a
+  one-dict-per-computation *list* on old jax, a flat dict on new.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_AMBIENT_MESH: Optional["jax.sharding.Mesh"] = None
+
+
+def set_mesh(mesh) -> None:
+    """Install ``mesh`` as the ambient mesh (process-wide, no context)."""
+    global _AMBIENT_MESH
+    if hasattr(jax.sharding, "set_mesh"):
+        jax.sharding.set_mesh(mesh)
+        return
+    _AMBIENT_MESH = mesh
+
+
+def get_abstract_mesh():
+    """The ambient (abstract) mesh, or None when none is installed.
+
+    On old jax this returns the *concrete* Mesh passed to ``set_mesh``;
+    concrete meshes expose the same ``axis_names`` / ``shape`` surface the
+    callers consume, and ``NamedSharding`` accepts them directly.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    return _AMBIENT_MESH
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` with partial-manual axes on both API generations."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": False}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {"check_rep": False}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Flat {metric: value} cost analysis for a ``Compiled`` object."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, dict):
+        return cost
+    if not cost:                     # old jax: list of per-computation dicts
+        return {}
+    out: dict = {}
+    for entry in cost:
+        for k, v in entry.items():
+            try:
+                out[k] = out.get(k, 0.0) + float(v)
+            except (TypeError, ValueError):
+                out.setdefault(k, v)
+    return out

@@ -1,0 +1,144 @@
+"""Shared test plumbing.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  Some CI
+images don't carry it, and a missing import must not take six whole test
+modules down with collection errors.  When the real package is absent we
+install a minimal shim into ``sys.modules`` that covers exactly the API
+surface our property tests use (``given``/``settings``/``strategies``
+``integers|booleans|lists|sets|data``): examples are drawn from a
+deterministic per-test RNG, so the tests still *run* — with less adversarial
+example generation and no shrinking, but the same oracles.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_shim():
+    class Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    def lists(elements, min_size=0, max_size=None):
+        hi = min_size + 10 if max_size is None else max_size
+
+        def draw(rng):
+            size = rng.randint(min_size, hi)
+            return [elements.example_from(rng) for _ in range(size)]
+
+        return Strategy(draw)
+
+    def sets(elements, min_size=0, max_size=None):
+        hi = min_size + 10 if max_size is None else max_size
+
+        def draw(rng):
+            size = rng.randint(min_size, hi)
+            out = set()
+            for _ in range(8 * size + 8):
+                if len(out) >= size:
+                    break
+                out.add(elements.example_from(rng))
+            return out
+
+        return Strategy(draw)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example_from(self._rng)
+
+    class _DataStrategy(Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    def data():
+        return _DataStrategy()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def mark(f):
+            f._shim_settings = {"max_examples": max_examples}
+            return f
+
+        return mark
+
+    class _Unsatisfied(Exception):
+        """Raised by assume(); the example loop skips the draw like real
+        hypothesis discards an unsatisfied example."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied()
+        return True
+
+    def given(*strategies, **kw_strategies):
+        def wrap(f):
+            n_examples = getattr(f, "_shim_settings",
+                                 {"max_examples": 20})["max_examples"]
+            # deterministic per-test seed: same examples every run
+            seed = int(hashlib.sha256(
+                f.__qualname__.encode()).hexdigest()[:8], 16)
+
+            # like real hypothesis, strategies fill parameters from the
+            # right; anything left of them (pytest parametrize args,
+            # fixtures) stays in the visible signature
+            sig = inspect.signature(f)
+            params = list(sig.parameters.values())
+            n_outer = len(params) - len(strategies) - len(kw_strategies)
+            strat_names = [p.name for p in
+                           params[n_outer:n_outer + len(strategies)]]
+
+            def runner(*args, **kwargs):
+                rng = random.Random(seed)
+                for _ in range(n_examples):
+                    ex_kw = dict(zip(strat_names,
+                                     (s.example_from(rng)
+                                      for s in strategies)))
+                    for k, s in kw_strategies.items():
+                        ex_kw[k] = s.example_from(rng)
+                    try:
+                        f(*args, **kwargs, **ex_kw)
+                    except _Unsatisfied:
+                        continue
+
+            # NOT functools.wraps: pytest must only see the outer params or
+            # it resolves the strategy parameters as fixtures
+            runner.__signature__ = inspect.Signature(params[:n_outer])
+            for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+                setattr(runner, attr, getattr(f, attr))
+            return runner
+
+        return wrap
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name, fn in [("integers", integers), ("booleans", booleans),
+                     ("lists", lists), ("sets", sets), ("data", data)]:
+        setattr(st_mod, name, fn)
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:                                     # pragma: no cover - env dependent
+    import hypothesis                    # noqa: F401
+except ImportError:
+    _install_hypothesis_shim()

@@ -1,0 +1,167 @@
+"""Fused (device-resident) engine vs host-loop engine parity.
+
+The fused engine must be a pure performance transform: same frontiers, same
+verdicts, same drop accounting, bit for bit.  Both engines are driven with
+the same pinned ``block`` so their chunk partitioning — and therefore their
+dedup and overflow behaviour — is identical; any divergence is a bug in the
+while_loop fusion, not legitimate nondeterminism.
+
+Also pins the engine's contract: O(1) dispatches/host syncs per decide, and
+end-to-end ``solve`` agreement with a pure-python Held-Karp treewidth
+oracle on random graphs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bitset, engine, expand, frontier as frontier_lib
+from repro.core import graph, solver
+
+BLOCK = 32          # pinned: host run_level adapts within [32, block], so 32
+                    # forces identical chunking in both engines
+
+CONFIGS = [
+    dict(mode="sort", use_mmw=False, use_simplicial=False),
+    dict(mode="bloom", use_mmw=False, use_simplicial=False),
+    dict(mode="sort", use_mmw=True, use_simplicial=False),
+    dict(mode="sort", use_mmw=False, use_simplicial=True),
+]
+CONFIG_IDS = ["sort", "bloom", "sort+mmw", "sort+simplicial"]
+
+
+def _devify(g):
+    adj = jnp.asarray(g.packed())
+    allowed = jnp.asarray(np.asarray(bitset.full(g.n)))
+    return adj, allowed
+
+
+def _host_levels(adj, allowed, k, levels, *, n, cap, **kw):
+    """Drive solver.run_level like decide's host loop; return the final
+    frontier plus accumulated (expanded, dropped)."""
+    w = adj.shape[-1]
+    fr = frontier_lib.empty_frontier(cap, w)
+    expanded = dropped = 0
+    for _ in range(levels):
+        fr, stats = solver.run_level(adj, fr, k, allowed, n=n, cap=cap,
+                                     block=BLOCK, **kw)
+        expanded += stats.expanded
+        dropped += stats.dropped
+        if int(fr.count) == 0:
+            break
+    return fr, expanded, dropped
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_frontier_parity_random_graphs(cfg, seed):
+    """Level-by-level frontier buffers match bit for bit (incl. overflow:
+    cap=512 is small enough that denser draws drop states)."""
+    rng = np.random.RandomState(seed)
+    n, cap = 12, 512
+    g = graph.gnp(n, float(rng.uniform(0.15, 0.55)), seed)
+    k = int(rng.randint(1, n - 2))
+    target = n - (k + 1)
+    if target <= 0:
+        return
+    adj, allowed = _devify(g)
+    kw = dict(n=n, cap=cap, m_bits=1 << 12, k_hashes=4,
+              schedule="doubling", impl="jax", **cfg)
+
+    fr_h, exp_h, drop_h = _host_levels(adj, allowed, k, target, **kw)
+    feas_f, inexact_f, exp_f, fr_f = engine.fused_decide(
+        adj, allowed, k, target, block=BLOCK, **kw)
+
+    assert exp_f == exp_h
+    assert inexact_f == (drop_h > 0)
+    assert int(fr_f.dropped) == int(drop_h)
+    assert int(fr_f.count) == int(fr_h.count)
+    assert feas_f == (int(fr_h.count) > 0)
+    np.testing.assert_array_equal(np.asarray(fr_f.states),
+                                  np.asarray(fr_h.states))
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
+def test_decide_parity_named_graphs(cfg):
+    """decide() verdicts agree engine-to-engine across k on real instances."""
+    for g in [graph.petersen(), graph.myciel(3)]:
+        for k in range(1, 7):
+            kw = dict(cap=1 << 12, block=BLOCK, m_bits=1 << 14, k_hashes=4,
+                      schedule="doubling", **cfg)
+            a = solver.decide(g, k, [], engine="host", **kw)
+            b = solver.decide(g, k, [], engine="fused", **kw)
+            assert (a.feasible, a.inexact, a.expanded) == \
+                (b.feasible, b.inexact, b.expanded), (g.name, k, a, b)
+
+
+def test_fused_decide_is_one_dispatch_one_sync():
+    """The acceptance criterion: O(1) host transfers per k, independent of
+    the number of levels and chunks."""
+    g = graph.queen(5)          # 18 levels of chunked expansion per decide
+    engine.reset_counters()
+    solver.decide(g, 17, [], cap=1 << 14, block=BLOCK, mode="sort",
+                  use_mmw=False, m_bits=1, k_hashes=1,
+                  schedule="doubling", engine="fused")
+    assert engine.COUNTERS["dispatches"] == 1
+    assert engine.COUNTERS["host_syncs"] == 1
+
+    engine.reset_counters()
+    solver.decide(g, 17, [], cap=1 << 14, block=BLOCK, mode="sort",
+                  use_mmw=False, m_bits=1, k_hashes=1,
+                  schedule="doubling", engine="host")
+    # host loop: a dispatch per chunk and several syncs per level — both
+    # grow with the instance instead of staying O(1)
+    assert engine.COUNTERS["dispatches"] > 10
+    assert engine.COUNTERS["host_syncs"] > 10
+
+
+def _tw_oracle(g):
+    """Exact Held-Karp treewidth by python DP over subsets (n <= 12)."""
+    n = g.n
+    adjb = [list(map(bool, row)) for row in g.adj]
+    full = (1 << n) - 1
+    f = {0: -1}
+    for s in range(1, full + 1):
+        best = n
+        members = [v for v in range(n) if s >> v & 1]
+        sset = set(members)
+        for v in members:
+            prev = f[s & ~(1 << v)]
+            d = expand.degree_oracle(adjb, sset - {v}, v)
+            best = min(best, max(prev, d))
+        f[s] = best
+    return f[full]
+
+
+def test_solve_matches_python_oracle():
+    """End-to-end fused solve() against the exact python DP."""
+    for seed in range(5):
+        rng = np.random.RandomState(100 + seed)
+        g = graph.gnp(8, float(rng.uniform(0.2, 0.6)), 100 + seed)
+        want = _tw_oracle(g)
+        got = solver.solve(g, cap=1 << 12, block=BLOCK, engine="fused")
+        assert got.exact and got.width == want, (seed, want, got)
+
+
+def test_solve_engine_agreement_end_to_end():
+    """Full solve(): width/exact/expanded identical between engines."""
+    cases = [graph.petersen(), graph.myciel(3), graph.grid(3, 5),
+             graph.gnp(13, 0.3, 7)]
+    for g in cases:
+        solve_kw = dict(cap=1 << 13, block=BLOCK)
+        a = solver.solve(g, engine="host", **solve_kw)
+        b = solver.solve(g, engine="fused", **solve_kw)
+        assert (a.width, a.exact, a.expanded) == \
+            (b.width, b.exact, b.expanded), (g.name, a, b)
+
+
+def test_keep_levels_forces_host_engine():
+    """Reconstruction path still works when the fused engine is requested:
+    keep_levels falls back to the host loop and returns snapshots."""
+    g = graph.petersen()
+    res = solver.solve(g, cap=1 << 13, block=BLOCK, use_preprocess=False,
+                      reconstruct=True, engine="fused")
+    assert res.order is not None
+    assert solver.order_width(g, res.order) == res.width == 4
