@@ -1,14 +1,23 @@
-"""Host-sync microbench: fused (device-resident) vs host-loop engine.
+"""Host-sync microbench: engine (host vs fused) x backend (jax vs pallas).
 
 The paper's §3 design point is that the Held-Karp frontier never leaves the
 GPU; the cost of not doing that is kernel-dispatch serialisation.  This
 bench quantifies it on the Table 1 instances: for each graph it runs the
-full iterative-deepening solve under both engines and reports wall-clock,
-jitted-program dispatches, and blocking device→host transfers (counted by
-``repro.core.engine.COUNTERS``).
+full iterative-deepening solve under each engine x backend combination and
+reports wall-clock, jitted-program dispatches, and blocking device→host
+transfers (counted by ``repro.core.engine.COUNTERS``).
 
-    python -m benchmarks.engine_sync            # fast suite
+The backend column tracks the fused pallas wavefront kernel against the
+jax reference composition from day one (ISSUE 2).  On CPU the pallas rows
+run in interpret mode, so their absolute times measure the interpreter,
+not the kernel — the dispatch/sync counts and the bit-for-bit width/
+expanded parity asserts are what carry; wall-clock becomes meaningful on
+real TPU hardware.
+
+    python -m benchmarks.engine_sync             # fast suite
+    python -m benchmarks.engine_sync --quick     # CI-sized suite
     python -m benchmarks.engine_sync --full
+    python -m benchmarks.engine_sync --no-pallas # jax rows only
 """
 from __future__ import annotations
 
@@ -17,44 +26,64 @@ from repro.core import solver
 
 from .common import SUITE_FAST, SUITE_FULL, Timer, emit, get_instance
 
+SUITE_QUICK = [("myciel3", 5), ("petersen", 4), ("desargues", 6)]
 
-def run(full: bool = False, cap: int = 1 << 18, block: int = 1 << 10):
-    suite = SUITE_FULL if full else SUITE_FAST
+# (backend, engine) rows per instance; host/pallas adds nothing the other
+# three don't already cover (host-loop overhead is backend-independent)
+COMBOS = [("jax", "host"), ("jax", "fused"), ("pallas", "fused")]
+
+
+def run(full: bool = False, quick: bool = False, pallas: bool = True,
+        cap: int = 1 << 18, block: int = 1 << 10):
+    suite = SUITE_FULL if full else (SUITE_QUICK if quick else SUITE_FAST)
+    combos = [c for c in COMBOS if pallas or c[0] != "pallas"]
     rows = []
-    header = (f"{'instance':<12} {'engine':<6} {'tw':>3} {'time_s':>8} "
-              f"{'dispatches':>10} {'host_syncs':>10}")
+    header = (f"{'instance':<12} {'backend':<7} {'engine':<6} {'tw':>3} "
+              f"{'time_s':>8} {'dispatches':>10} {'host_syncs':>10}")
     print(header, flush=True)
     for key, want in suite:
         g = get_instance(key)
-        per_engine = {}
-        for engine in ("host", "fused"):
+        per_combo = {}
+        for backend, engine in combos:
             engine_lib.reset_counters()
             with Timer() as t:
-                res = solver.solve(g, cap=cap, block=block, engine=engine)
+                res = solver.solve(g, cap=cap, block=block, engine=engine,
+                                   backend=backend, schedule="doubling")
             c = dict(engine_lib.COUNTERS)
             ok = (want is None) or (res.width == want)
-            per_engine[engine] = (res, c, t.seconds, ok)
-            rows.append((key, engine, res.width, t.seconds,
+            per_combo[(backend, engine)] = (res, c, t.seconds, ok)
+            rows.append((key, backend, engine, res.width, t.seconds,
                          c["dispatches"], c["host_syncs"], ok))
-            print(f"{key:<12} {engine:<6} {res.width:>3} {t.seconds:>8.2f} "
-                  f"{c['dispatches']:>10} {c['host_syncs']:>10}", flush=True)
-            emit(f"engine_sync/{key}/{engine}", t.seconds,
+            print(f"{key:<12} {backend:<7} {engine:<6} {res.width:>3} "
+                  f"{t.seconds:>8.2f} {c['dispatches']:>10} "
+                  f"{c['host_syncs']:>10}", flush=True)
+            emit(f"engine_sync/{key}/{backend}/{engine}", t.seconds,
                  f"tw={res.width};dispatches={c['dispatches']};"
                  f"host_syncs={c['host_syncs']};expected_ok={ok}")
-        (rh, ch, th, _), (rf, cf, tf, _) = (per_engine["host"],
-                                            per_engine["fused"])
-        assert rh.width == rf.width, (key, rh.width, rf.width)
-        assert rh.expanded == rf.expanded, (key, rh.expanded, rf.expanded)
+        # parity across every combo: same width, same states expanded
+        base, *rest = [per_combo[c][0] for c in combos]
+        for r in rest:
+            assert r.width == base.width, (key, r.width, base.width)
+            assert r.expanded == base.expanded, \
+                (key, r.expanded, base.expanded)
+        (rh, ch, th, _) = per_combo[("jax", "host")]
+        (rf, cf, tf, _) = per_combo[("jax", "fused")]
         speedup = th / max(tf, 1e-9)
         sync_ratio = ch["host_syncs"] / max(cf["host_syncs"], 1)
         emit(f"engine_sync/{key}/summary", tf,
              f"speedup={speedup:.2f}x;sync_reduction={sync_ratio:.0f}x")
-        print(f"{key:<12} -> speedup {speedup:.2f}x, "
+        print(f"{key:<12} -> fused speedup {speedup:.2f}x, "
               f"{ch['host_syncs']} -> {cf['host_syncs']} syncs "
               f"({sync_ratio:.0f}x fewer)", flush=True)
+        if ("pallas", "fused") in per_combo:
+            (rp, cp, tp, _) = per_combo[("pallas", "fused")]
+            emit(f"engine_sync/{key}/backend_summary", tp,
+                 f"jax_fused_s={tf:.3f};pallas_fused_s={tp:.3f};"
+                 f"parity=exact")
     return rows
 
 
 if __name__ == "__main__":
     import sys
-    run(full="--full" in sys.argv)
+    run(full="--full" in sys.argv, quick="--quick" in sys.argv,
+        pallas="--no-pallas" not in sys.argv)

@@ -20,16 +20,16 @@ BLOCKS = [128, 256, 512, 1024, 2048]
 
 
 def run(pallas: bool = False):
-    impls = ["jax", "pallas"] if pallas else ["jax"]
+    backends = ["jax", "pallas"] if pallas else ["jax"]
     for key in INSTANCES:
         g = get_instance(key)
         base = None
-        for impl in impls:
+        for backend in backends:
             for block in BLOCKS:
                 with Timer() as t:
                     res = solver.solve(g, cap=1 << 16, block=block,
-                                       impl=impl)
-                tag = "S" if impl == "pallas" else "G"
+                                       backend=backend)
+                tag = "S" if backend == "pallas" else "G"
                 base = base or res.width
                 assert res.width == base
                 emit(f"table2/{key}/{tag}/W={block}", t.seconds,

@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -39,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.utils import compat
 
+from . import backend as backend_lib
 from . import bitset, bloom, bounds, dedup
 from . import engine as engine_lib
 from . import preprocess as preprocess_lib
@@ -56,7 +58,7 @@ def make_solver_mesh(devices=None) -> Mesh:
 # ------------------------------------------------------------ device-local fn
 
 def _local_expand(adj, states, count, k, allowed, *, n, cap_local, block,
-                  use_mmw, schedule, impl):
+                  use_mmw, use_simplicial, schedule, backend):
     """Expand the local states in block chunks; returns (buf, count, drops).
 
     Pure per-device computation (no collectives) — the shared
@@ -70,7 +72,7 @@ def _local_expand(adj, states, count, k, allowed, *, n, cap_local, block,
     return engine_lib.chunk_sweep(
         adj, allowed, k, states, count, block, n=n, cap=cap_local,
         mode="sort", use_mmw=use_mmw, m_bits=1, k_hashes=1,
-        schedule=schedule, impl=impl, use_simplicial=False,
+        schedule=schedule, backend=backend, use_simplicial=use_simplicial,
         max_chunks=-(-cap_local // block), cross_dedup=False)
 
 
@@ -102,7 +104,7 @@ def _build_buckets(rows, count, ndev, cap_send, w):
 
 
 def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
-                         use_mmw, schedule, impl):
+                         use_mmw, use_simplicial, schedule, backend):
     """The per-level SPMD program: local expand -> ownership all_to_all ->
     owner dedup.  Returned un-jitted so it can be embedded either in a
     host-driven per-level jit or inside the fused while_loop."""
@@ -114,7 +116,8 @@ def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
         w = adj.shape[-1]
         out, ocount, drop_local = _local_expand(
             adj, states, count[0], k, allowed, n=n, cap_local=cap_local,
-            block=block, use_mmw=use_mmw, schedule=schedule, impl=impl)
+            block=block, use_mmw=use_mmw, use_simplicial=use_simplicial,
+            schedule=schedule, backend=backend)
         # ownership routing (all_to_all over the flattened device axes)
         send, send_counts, drop_send = _build_buckets(
             out, ocount, ndev, cap_send, w)
@@ -139,20 +142,22 @@ def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
 _DIST_FN_CACHE: dict = {}
 
 
-def _dist_fns(mesh, *, n, cap_local, block, cap_send, use_mmw, schedule,
-              impl):
+def _dist_fns(mesh, *, n, cap_local, block, cap_send, use_mmw,
+              use_simplicial, schedule, backend):
     """(jitted per-level fn, jitted fused decide fn) for one config.
 
     Module-level cache: jit compilation caches key on function identity, so
     rebuilding the closures per ``decide`` call (the old behaviour) forced
     a retrace for every k of the iterative deepening."""
-    key = (mesh, n, cap_local, block, cap_send, use_mmw, schedule, impl)
+    key = (mesh, n, cap_local, block, cap_send, use_mmw, use_simplicial,
+           schedule, backend)
     if key in _DIST_FN_CACHE:
         return _DIST_FN_CACHE[key]
 
     level_sm = _make_level_shardmap(
         mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
-        use_mmw=use_mmw, schedule=schedule, impl=impl)
+        use_mmw=use_mmw, use_simplicial=use_simplicial, schedule=schedule,
+        backend=backend)
 
     def fused_decide_fn(adj, states, counts, k, target, allowed):
         """Whole decide loop device-resident: mirrors engine._fused_decide
@@ -203,7 +208,8 @@ def _init_frontier(mesh, cap_local, w):
 
 def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
                        cap_local: int, block: int, use_mmw: bool = False,
-                       schedule: str = "doubling", impl: str = "jax",
+                       use_simplicial: bool = False,
+                       schedule: str = "doubling", backend: str = "jax",
                        checkpoint_cb=None, resume: Optional[dict] = None,
                        engine: str = "fused"):
     """Distributed decision: is tw(g) <= k?  Mirrors solver.decide.
@@ -212,6 +218,8 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
     program (the sharded analogue of ``engine.fused_decide``): zero host
     syncs until the verdict.  Per-level checkpointing needs host snapshots,
     so a ``checkpoint_cb`` forces the host loop."""
+    backend_lib.validate(backend, mode="sort", schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial)
     n = g.n
     block = engine_lib.validate_geometry(cap_local, block)
     target = n - max(k + 1, len(clique))
@@ -236,7 +244,8 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
 
     level_fn, fused_fn = _dist_fns(
         mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
-        use_mmw=use_mmw, schedule=schedule, impl=impl)
+        use_mmw=use_mmw, use_simplicial=use_simplicial, schedule=schedule,
+        backend=backend)
     kdev = jnp.asarray(k, jnp.int32)
 
     if engine == "fused" and checkpoint_cb is None:
@@ -296,13 +305,19 @@ def _restore(mesh, ckpt: dict, cap_local: int, w: int):
 
 def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                       block: int = 1 << 8, use_mmw: bool = False,
-                      schedule: str = "doubling", impl: str = "jax",
+                      use_simplicial: bool = False,
+                      schedule: str = "doubling", backend: str = "jax",
                       use_clique: bool = True, use_paths: bool = True,
                       use_preprocess: bool = True,
                       checkpoint_cb=None, verbose: bool = False,
-                      engine: str = "fused") -> SolveResult:
+                      engine: str = "fused",
+                      impl: Optional[str] = None) -> SolveResult:
     """Distributed analogue of solver.solve (width only, no reconstruction)."""
     t0 = time.time()
+    if impl is not None:
+        warnings.warn("solve_distributed(impl=...) is deprecated; use "
+                      "backend=...", DeprecationWarning, stacklevel=2)
+        backend = impl
     if g.n == 0:
         return SolveResult(0, True, 0, 0, 0, 0.0, [], {})
 
@@ -332,7 +347,8 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                 if use_paths else part
             feasible, inexact, exp = decide_distributed(
                 gk, k, clique, mesh, cap_local=cap_local, block=block,
-                use_mmw=use_mmw, schedule=schedule, impl=impl,
+                use_mmw=use_mmw, use_simplicial=use_simplicial,
+                schedule=schedule, backend=backend,
                 checkpoint_cb=checkpoint_cb, engine=engine)
             expanded += exp
             any_inexact |= inexact

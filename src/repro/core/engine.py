@@ -17,7 +17,10 @@ against.  This module fuses both loops:
     overflow accounting all happen inside the loop body via
     ``expand_chunk`` — the single shared implementation of the paper's
     Listing-1 inner loop, also used by the host-loop path and the
-    distributed solver.
+    distributed solver.  Every op inside it resolves through the backend
+    registry (``core.backend``): ``backend="jax"`` composes the reference
+    implementations, ``backend="pallas"`` dispatches the fused wavefront
+    kernel that runs the whole expand→prune pipeline in one VMEM pass.
 
 One ``fused_decide`` call therefore issues exactly one dispatch and one
 device→host transfer per k, versus O(levels × chunks) for the host loop.
@@ -36,8 +39,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import bloom, dedup, expand, frontier as frontier_lib
-from . import mmw as mmw_lib
+from . import backend as backend_lib
+from . import dedup
+from . import frontier as frontier_lib
 
 U32 = jnp.uint32
 
@@ -82,38 +86,34 @@ def validate_geometry(cap: int, block: int, *, adaptive: bool = False) -> int:
 
 def expand_chunk(adj, states_chunk, chunk_valid, k, out, ocount, dropped,
                  filt, allowed, *, n, cap, block, mode, use_mmw, m_bits,
-                 k_hashes, schedule, impl, use_simplicial=False):
+                 k_hashes, schedule, backend, use_simplicial=False):
     """Expand one chunk of states and append deduped children to ``out``.
 
     The paper's Listing-1 inner loop in one place: called from the host
     chunk loop (``solver._chunk_step``), from the fused while_loop below,
     and from the distributed per-device expansion.  Pure function of its
     arguments — safe inside any jit / while_loop / shard_map context.
+
+    Every op dispatches through the backend registry: under
+    ``backend="pallas"`` the whole expand → feasibility → prune pipeline
+    runs as one fused VMEM-resident kernel emitting (children, feasible)
+    directly; under ``backend="jax"`` the same pipeline is composed from
+    the reference implementations in ``core/*``.
     """
     w = adj.shape[-1]
-    children, feas, _deg, reach = expand.expand_block(
-        adj, states_chunk, chunk_valid, k, allowed, n, schedule=schedule,
-        impl=impl)
-
-    if use_simplicial:
-        simp = expand.simplicial_mask(adj, states_chunk, reach, feas, n)
-        feas = expand.collapse_simplicial(feas, simp)
-
-    if use_mmw:
-        lbs = jax.vmap(lambda r, s: mmw_lib.mmw_bound(r, s, k, n))(
-            reach, states_chunk)
-        feas = feas & (lbs <= k)[:, None]
+    children, feas = backend_lib.get_op("wavefront_expand", backend)(
+        adj, states_chunk, chunk_valid, k, allowed, n=n, schedule=schedule,
+        use_mmw=use_mmw, use_simplicial=use_simplicial)
 
     flat = children.reshape(block * n, w)
     fmask = feas.reshape(block * n)
 
     # intra-chunk exact dedup (paper: mutex-striped atomic inserts)
-    skeys, svalid = dedup.sort_states(flat, fmask)
-    keep = dedup.unique_mask(skeys, svalid)
+    skeys, keep = backend_lib.get_op("sort_dedup", backend)(flat, fmask)
 
     if mode == "bloom":
-        keep, filt = bloom.query_and_insert(filt, skeys, keep, m_bits,
-                                            k_hashes)
+        keep, filt = backend_lib.get_op("bloom_query_insert", backend)(
+            filt, skeys, keep, m_bits=m_bits, k_hashes=k_hashes)
 
     pos = ocount + jnp.cumsum(keep.astype(jnp.int32)) - 1
     write = keep & (pos < cap)
@@ -135,8 +135,8 @@ SMALL_BLOCK = 128
 
 
 def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
-                use_mmw, m_bits, k_hashes, schedule, impl, use_simplicial,
-                max_chunks=None, cross_dedup=True):
+                use_mmw, m_bits, k_hashes, schedule, backend,
+                use_simplicial, max_chunks=None, cross_dedup=True):
     """Expand ``count_`` rows of ``states`` in ``blk``-row chunks, on device.
 
     The data-dependent chunk loop shared by the fused level step and the
@@ -147,7 +147,8 @@ def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
     w = adj.shape[-1]
     zero = jnp.asarray(0, jnp.int32)
     out = jnp.zeros((cap, w), dtype=U32)
-    filt = bloom.make_filter(m_bits if mode == "bloom" else 1)
+    filt = backend_lib.get_op("bloom_make_filter", backend)(
+        m_bits if mode == "bloom" else None)
 
     def chunk_cond(c):
         more = c[0] * blk < count_
@@ -163,8 +164,8 @@ def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
         out, ocount, dropped, filt = expand_chunk(
             adj, states_chunk, chunk_valid, k, out, ocount, dropped, filt,
             allowed, n=n, cap=cap, block=blk, mode=mode, use_mmw=use_mmw,
-            m_bits=m_bits, k_hashes=k_hashes, schedule=schedule, impl=impl,
-            use_simplicial=use_simplicial)
+            m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+            backend=backend, use_simplicial=use_simplicial)
         return ci + 1, out, ocount, dropped, filt
 
     _, out, ocount, dropped, _ = jax.lax.while_loop(
@@ -186,7 +187,7 @@ def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
 
 
 def _level_step(adj, allowed, k, fr, *, n, cap, block, mode, use_mmw,
-                m_bits, k_hashes, schedule, impl, use_simplicial):
+                m_bits, k_hashes, schedule, backend, use_simplicial):
     """One wavefront level, fully on device.  Traced inside the while body.
 
     Chunk trip count is ``ceil(count / block)`` with the count read from the
@@ -198,7 +199,7 @@ def _level_step(adj, allowed, k, fr, *, n, cap, block, mode, use_mmw,
     small = min(block, SMALL_BLOCK)
     count_ = fr.count
     kwargs = dict(n=n, cap=cap, mode=mode, use_mmw=use_mmw, m_bits=m_bits,
-                  k_hashes=k_hashes, schedule=schedule, impl=impl,
+                  k_hashes=k_hashes, schedule=schedule, backend=backend,
                   use_simplicial=use_simplicial)
 
     if small == block:
@@ -219,9 +220,9 @@ def _level_step(adj, allowed, k, fr, *, n, cap, block, mode, use_mmw,
 @functools.partial(
     jax.jit,
     static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
-                     "k_hashes", "schedule", "impl", "use_simplicial"))
+                     "k_hashes", "schedule", "backend", "use_simplicial"))
 def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
-                  use_mmw, m_bits, k_hashes, schedule, impl,
+                  use_mmw, m_bits, k_hashes, schedule, backend,
                   use_simplicial):
     """Run up to ``target`` wavefront levels; stop early on emptiness.
 
@@ -241,7 +242,7 @@ def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
         new_fr = _level_step(adj, allowed, k, fr, n=n, cap=cap, block=block,
                              mode=mode, use_mmw=use_mmw, m_bits=m_bits,
                              k_hashes=k_hashes, schedule=schedule,
-                             impl=impl, use_simplicial=use_simplicial)
+                             backend=backend, use_simplicial=use_simplicial)
         return new_fr, level + 1, expanded, dropped + new_fr.dropped
 
     fr, level, expanded, dropped = jax.lax.while_loop(
@@ -250,7 +251,7 @@ def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
 
 
 def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
-                 mode, use_mmw, m_bits, k_hashes, schedule, impl,
+                 mode, use_mmw, m_bits, k_hashes, schedule, backend="jax",
                  use_simplicial=False, fr=None, max_levels=None):
     """Host entry point: one dispatch, one sync, full verdict.
 
@@ -262,6 +263,9 @@ def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
     ``frontier_host`` is the final (states, count, dropped_total) pulled to
     the host in the same single transfer as the verdict.
     """
+    backend_lib.validate(backend, mode=mode, schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial,
+                         m_bits=m_bits)
     block = validate_geometry(cap, block)
     w = adj_dev.shape[-1]
     if fr is None:
@@ -273,7 +277,7 @@ def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
     fr, level, expanded, dropped = _fused_decide(
         adj_dev, allowed_dev, kdev, tdev, fr, n=n, cap=cap, block=block,
         mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-        schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+        schedule=schedule, backend=backend, use_simplicial=use_simplicial)
     count(dispatches=1)
 
     states_h, count_h, expanded_h, dropped_h = jax.device_get(

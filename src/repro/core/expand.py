@@ -2,10 +2,13 @@
 
 ``expand_block`` is the data-parallel replacement of Listing 1 lines 5-22:
 for a block of states S it computes, for *every* candidate vertex v at once,
-``deg_S(v)`` and the child bitset ``S ∪ {v}``.  Pure-JAX path; the Pallas
-kernel in ``repro.kernels.expand`` computes the same function with explicit
-VMEM tiling and is validated against this module (and both against the
-python oracle in tests).
+``deg_S(v)`` and the child bitset ``S ∪ {v}``.  ``wavefront_expand`` layers
+the feasibility mask and the pruning rules (simplicial collapse, MMW) on
+top — it is the **jax reference implementation** of the backend registry's
+``wavefront_expand`` op (``repro.core.backend``); the fused Pallas kernel
+in ``repro.kernels.wavefront`` computes the same function in one
+VMEM-resident pass and is validated against this module bit for bit (and
+both against the python oracles in tests).
 """
 from __future__ import annotations
 
@@ -15,14 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from . import bitset, components
+from . import mmw as mmw_lib
 
 U32 = jnp.uint32
 
 
-@functools.partial(jax.jit, static_argnames=("n", "schedule", "impl"))
+@functools.partial(jax.jit, static_argnames=("n", "schedule"))
 def expand_block(adj: jnp.ndarray, states: jnp.ndarray, valid: jnp.ndarray,
                  k: jnp.ndarray, allowed: jnp.ndarray, n: int,
-                 schedule: str = "doubling", impl: str = "jax"):
+                 schedule: str = "doubling"):
     """Expand a block of states.
 
     adj:     (n, W) packed adjacency
@@ -30,18 +34,12 @@ def expand_block(adj: jnp.ndarray, states: jnp.ndarray, valid: jnp.ndarray,
     valid:   (B,)   bool
     k:       scalar int32 — target treewidth
     allowed: (W,)   candidate mask (complement of the max-clique skip set)
-    impl:    "jax" (vmap) or "pallas" (VMEM-tiled kernel; no reach output,
-             so incompatible with MMW pruning)
 
     Returns (children (B, n, W), feasible (B, n) bool, degrees (B, n) int32,
-             reach (B, n, W) — per-state eliminated-graph adjacency, for MMW;
-             None under impl="pallas").
+             reach (B, n, W) — per-state eliminated-graph adjacency, reused
+             by the MMW and simplicial pruning rules).
     """
-    if impl == "pallas":
-        from repro.kernels.expand import expand_degrees
-        degrees = expand_degrees(adj, states, n=n)
-        reach = None
-    elif schedule == "matmul":
+    if schedule == "matmul":
         deg_fn = lambda s: components.eliminated_degrees_matmul(adj, s, n)
         degrees, reach = jax.vmap(deg_fn)(states)
     else:
@@ -62,6 +60,27 @@ def expand_block(adj: jnp.ndarray, states: jnp.ndarray, valid: jnp.ndarray,
     return children, feasible, degrees, reach
 
 
+def simplicial_viol(q, closed, n: int):
+    """viol (B, n) bool: candidate v has a witness u ∈ Q_v whose closed
+    eliminated-graph neighborhood misses part of Q_v (so Q_v is no clique).
+
+    Word-level scan over witnesses u — every intermediate stays (B, n, W).
+    Capture-free pure jnp: the fused pallas wavefront kernel imports this
+    exact function, so the parity-critical rule has a single source.
+    q, closed: (B, n, W).
+    """
+    def body(u, viol):
+        has_u = bitset.get_bit(q, u)                         # (B,n): u ∈ Q_v?
+        closed_u = jax.lax.dynamic_index_in_dim(closed, u, axis=1,
+                                                keepdims=False)     # (B,W)
+        t = jnp.any((q & ~closed_u[:, None, :]) != 0, axis=-1)      # (B,n)
+        return viol | (has_u & t)
+
+    b = q.shape[0]
+    return jax.lax.fori_loop(0, n, body,
+                             jnp.zeros((b, n), dtype=jnp.bool_))
+
+
 def simplicial_mask(adj, states, reach, feasible, n: int):
     """Per (state, v): is v simplicial in the eliminated graph G_S?
 
@@ -71,20 +90,22 @@ def simplicial_mask(adj, states, reach, feasible, n: int):
     elimination prefix exists), so all sibling branches can be pruned —
     the caller collapses ``feasible`` to exactly one such v.
 
+    Memory: the scan over witness vertices u keeps every intermediate at
+    (B, n, W) — O(B·n·W) words — instead of materialising the pairwise
+    (B, n, n, W) miss tensor of the naive formulation (at block=1024,
+    n=64, W=2 that 4-D tensor is ~32 MiB, ~8x the frontier buffer; the
+    scan peak is ~4 MiB).  Arithmetic cost is unchanged (O(B·n²·W) word
+    ops either way).
+
     adj (n,W); states (B,W); reach (B,n,W); feasible (B,n) ->
     (is_simplicial (B,n) bool).
     """
     w = adj.shape[-1]
     eye = components._eye_words(n, w)
     q = (reach & ~states[:, None, :]) & ~eye[None]           # (B,n,W) Q(S,v)
-    q_bits = bitset.unpack(q, n)                             # (B,n,n)
     # u's eliminated-graph closed neighborhood: reach[u] | {u}
     closed = reach | eye[None]                               # (B,n,W)
-    # violation[v] = exists u in Q_v with  Q_v \ closed(u) != {}
-    miss = q[:, :, None, :] & ~closed[:, None, :, :]         # (B,n,n,W)
-    nonzero = jnp.any(miss != 0, axis=-1)                    # (B,n,n)
-    viol = jnp.any(q_bits & nonzero, axis=-1)                # (B,n)
-    return feasible & ~viol
+    return feasible & ~simplicial_viol(q, closed, n)
 
 
 def collapse_simplicial(feasible, simp):
@@ -94,6 +115,35 @@ def collapse_simplicial(feasible, simp):
     idx = jnp.argmax(simp, axis=-1)                          # first True
     only = jax.nn.one_hot(idx, n, dtype=bool) & simp
     return jnp.where(has, only, feasible)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "schedule", "use_mmw",
+                                             "use_simplicial"))
+def wavefront_expand(adj, states, valid, k, allowed, *, n: int,
+                     schedule: str = "doubling", use_mmw: bool = False,
+                     use_simplicial: bool = False):
+    """The Listing-1 inner loop, jax backend: expand a block, apply the
+    feasibility test and the enabled pruning rules.
+
+    Same signature and bit-identical outputs as the fused pallas kernel
+    (``repro.kernels.wavefront.wavefront_expand``); dispatched via the
+    ``wavefront_expand`` op of ``repro.core.backend``.
+
+    Returns (children (B, n, W) uint32, feasible (B, n) bool).
+    """
+    children, feasible, _deg, reach = expand_block(
+        adj, states, valid, k, allowed, n, schedule=schedule)
+
+    if use_simplicial:
+        simp = simplicial_mask(adj, states, reach, feasible, n)
+        feasible = collapse_simplicial(feasible, simp)
+
+    if use_mmw:
+        lbs = jax.vmap(lambda r, s: mmw_lib.mmw_bound(r, s, k, n))(
+            reach, states)
+        feasible = feasible & (lbs <= k)[:, None]
+
+    return children, feasible
 
 
 def degree_oracle(adj_bool, s: set, v: int) -> int:

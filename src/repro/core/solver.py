@@ -22,12 +22,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import backend as backend_lib
 from . import bitset, bloom, bounds, dedup, engine as engine_lib
 from . import frontier as frontier_lib
 from . import expand
@@ -42,12 +44,12 @@ U32 = jnp.uint32
 @functools.partial(
     jax.jit,
     static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
-                     "k_hashes", "schedule", "impl", "use_simplicial"),
+                     "k_hashes", "schedule", "backend", "use_simplicial"),
     donate_argnums=(4, 7),
 )
 def _chunk_step(adj, states_chunk, chunk_valid, k, out, ocount, dropped,
                 filt, allowed, *, n, cap, block, mode, use_mmw, m_bits,
-                k_hashes, schedule, impl, use_simplicial=False):
+                k_hashes, schedule, backend, use_simplicial=False):
     """Expand one chunk of states and append deduped children to ``out``.
 
     Thin jitted wrapper over ``engine.expand_chunk`` — the single shared
@@ -56,8 +58,8 @@ def _chunk_step(adj, states_chunk, chunk_valid, k, out, ocount, dropped,
     return engine_lib.expand_chunk(
         adj, states_chunk, chunk_valid, k, out, ocount, dropped, filt,
         allowed, n=n, cap=cap, block=block, mode=mode, use_mmw=use_mmw,
-        m_bits=m_bits, k_hashes=k_hashes, schedule=schedule, impl=impl,
-        use_simplicial=use_simplicial)
+        m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+        backend=backend, use_simplicial=use_simplicial)
 
 
 @functools.partial(jax.jit, static_argnames=("cap",), donate_argnums=(0,))
@@ -84,8 +86,8 @@ def _pow2_at_least(x: int) -> int:
 
 def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
               *, n: int, cap: int, block: int, mode: str, use_mmw: bool,
-              m_bits: int, k_hashes: int, schedule: str, impl: str = "jax",
-              use_simplicial: bool = False):
+              m_bits: int, k_hashes: int, schedule: str,
+              backend: str = "jax", use_simplicial: bool = False):
     """One wavefront level: expand all states in ``fr`` into a new frontier.
 
     Host-loop engine: syncs on ``fr.count`` to size the chunk loop (the
@@ -105,7 +107,8 @@ def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
     out = jnp.zeros((cap, w), dtype=U32)
     ocount = jnp.asarray(0, dtype=jnp.int32)
     dropped = jnp.asarray(0, dtype=jnp.int32)
-    filt = bloom.make_filter(m_bits if mode == "bloom" else 1)
+    filt = backend_lib.get_op("bloom_make_filter", backend)(
+        m_bits if mode == "bloom" else None)
     kdev = jnp.asarray(k, dtype=jnp.int32)
 
     n_chunks = max(1, -(-count // block))
@@ -117,7 +120,8 @@ def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
             adj_dev, states_chunk, chunk_valid, kdev, out, ocount, dropped,
             filt, allowed_dev, n=n, cap=cap, block=block, mode=mode,
             use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-            schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+            schedule=schedule, backend=backend,
+            use_simplicial=use_simplicial)
         engine_lib.count(dispatches=1)
 
     if mode == "sort" and n_chunks > 1:
@@ -145,8 +149,8 @@ class DecideResult:
 
 def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
            mode: str, use_mmw: bool, m_bits: int, k_hashes: int,
-           schedule: str, impl: str = "jax", use_simplicial: bool = False,
-           keep_levels: bool = False,
+           schedule: str, backend: str = "jax",
+           use_simplicial: bool = False, keep_levels: bool = False,
            engine: str = "fused") -> DecideResult:
     """Is tw(g) <= k?  (Monte-Carlo 'no' possible in bloom mode / overflow.)
 
@@ -154,7 +158,12 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
     program on the device (one dispatch, one sync — §3's design point);
     ``engine="host"`` drives the level loop from the host, which is the
     only engine that can snapshot per-level frontiers (``keep_levels``,
-    needed for order reconstruction)."""
+    needed for order reconstruction).  ``backend`` picks the op
+    implementations (jax reference vs fused pallas kernels) through the
+    registry — validated here, before any tracing starts."""
+    backend_lib.validate(backend, mode=mode, schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial,
+                         m_bits=m_bits)
     n = g.n
     target = n - max(k + 1, len(clique))
     if target <= 0:
@@ -180,7 +189,8 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
         feasible, inexact, expanded, _fr = engine_lib.fused_decide(
             adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
             mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-            schedule=schedule, impl=impl, use_simplicial=use_simplicial)
+            schedule=schedule, backend=backend,
+            use_simplicial=use_simplicial)
         return DecideResult(feasible, inexact, expanded, None)
 
     fr = frontier_lib.empty_frontier(cap, w)
@@ -192,7 +202,7 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
         fr, stats = run_level(adj_dev, fr, k, allowed_dev, n=n, cap=cap,
                               block=block, mode=mode, use_mmw=use_mmw,
                               m_bits=m_bits, k_hashes=k_hashes,
-                              schedule=schedule, impl=impl,
+                              schedule=schedule, backend=backend,
                               use_simplicial=use_simplicial)
         expanded += stats.expanded
         inexact |= stats.dropped > 0
@@ -268,7 +278,7 @@ class SolveResult:
 def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
                 m_bits: int, k_hashes: int, schedule: str, use_clique: bool,
                 use_paths: bool, reconstruct: bool, start_k: Optional[int],
-                verbose: bool, impl: str = "jax",
+                verbose: bool, backend: str = "jax",
                 use_simplicial: bool = False,
                 engine: str = "fused") -> SolveResult:
     t0 = time.time()
@@ -291,7 +301,7 @@ def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
         gk = g.with_edges(bounds.paths_edges(g, paths, k)) if use_paths else g
         res = decide(gk, k, clique, cap=cap, block=block, mode=mode,
                      use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-                     schedule=schedule, impl=impl,
+                     schedule=schedule, backend=backend,
                      use_simplicial=use_simplicial,
                      keep_levels=reconstruct, engine=engine)
         expanded_total += res.expanded
@@ -317,21 +327,32 @@ def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
 
 def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
           mode: str = "sort", use_mmw: bool = False, m_bits: int = 1 << 24,
-          k_hashes: int = bloom.DEFAULT_K, schedule: str = "while",
+          k_hashes: int = bloom.DEFAULT_K, schedule: Optional[str] = None,
           use_clique: bool = True, use_paths: bool = True,
           use_preprocess: bool = True, reconstruct: bool = False,
           start_k: Optional[int] = None, verbose: bool = False,
-          impl: str = "jax", use_simplicial: bool = False,
-          engine: str = "fused") -> SolveResult:
+          backend: str = "jax", use_simplicial: bool = False,
+          engine: str = "fused", impl: Optional[str] = None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
     ``engine`` selects the wavefront driver: "fused" (device-resident
     ``lax.while_loop``, one dispatch per k) or "host" (per-level host loop;
-    forced automatically where reconstruction needs level snapshots)."""
+    forced automatically where reconstruction needs level snapshots).
+    ``backend`` selects the op implementations through the registry
+    (``repro.core.backend``): "jax" reference or fused "pallas" kernels.
+    ``schedule=None`` resolves to the backend's default closure fixpoint
+    ("while" for jax, the static "doubling" baked into the pallas kernels).
+    ``impl`` is the deprecated spelling of ``backend``."""
     t0 = time.time()
-    if impl == "pallas" and use_mmw:
-        raise ValueError("impl='pallas' does not produce the reach matrix "
-                         "needed by MMW pruning; use impl='jax'")
+    if impl is not None:
+        warnings.warn("solve(impl=...) is deprecated; use backend=...",
+                      DeprecationWarning, stacklevel=2)
+        backend = impl
+    if schedule is None:
+        schedule = "doubling" if backend == "pallas" else "while"
+    backend_lib.validate(backend, mode=mode, schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial,
+                         m_bits=m_bits)
     if g.n == 0:
         return SolveResult(0, True, 0, 0, 0, 0.0, [], {})
     if not use_preprocess:
@@ -339,7 +360,7 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
                           m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
                           use_clique=use_clique, use_paths=use_paths,
                           reconstruct=reconstruct, start_k=start_k,
-                          verbose=verbose, impl=impl,
+                          verbose=verbose, backend=backend,
                           use_simplicial=use_simplicial, engine=engine)
         return res
 
@@ -354,7 +375,7 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
                           use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
                           schedule=schedule, use_clique=use_clique,
                           use_paths=use_paths, reconstruct=False,
-                          start_k=start_k, verbose=verbose, impl=impl,
+                          start_k=start_k, verbose=verbose, backend=backend,
                           use_simplicial=use_simplicial, engine=engine)
         width = max(width, res.width)
         exact &= res.exact

@@ -1,5 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-expand/ — wavefront state expansion (Listing 1 inner loops)
-bloom/  — Bloom-filter dedup with sequential atomic-OR semantics (§3.2)
+common.py   — shared capture-free in-kernel bitset helpers
+expand/     — wavefront state expansion (Listing 1 inner loops)
+mmw/        — minor-min-width lower bound (§3.3)
+bloom/      — Bloom-filter dedup with sequential atomic-OR semantics (§3.2)
+wavefront/  — the fused inner loop: expand + feasibility + simplicial +
+              MMW in one VMEM pass, emitting (children, feasible) directly
+
+Each op is registered next to its pure-JAX reference implementation in the
+backend registry (``repro.core.backend``); the solver engines dispatch
+through the registry via a single ``backend=`` knob.
 """

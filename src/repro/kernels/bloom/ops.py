@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from .kernel import bloom_insert_pallas
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def make_filter_words(m_bits: int) -> jnp.ndarray:

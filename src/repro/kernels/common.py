@@ -1,0 +1,82 @@
+"""Shared in-kernel bitset helpers for the Pallas kernels.
+
+Pallas TPU kernels cannot capture host-side constant arrays (everything the
+kernel touches must be an input Ref or built from ``iota``), so the packed
+bitset primitives from ``repro.core.bitset`` are re-expressed here in a
+capture-free form.  Every kernel in ``repro.kernels`` builds on these —
+they are the single source of truth for the in-kernel bit algebra, and the
+math is identical word-for-word to the core versions (pinned by the parity
+tests in tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def log2_ceil(n: int) -> int:
+    """Static doubling trip count: smallest b with 2**b >= n (n >= 2)."""
+    b = 1
+    while (1 << b) < n:
+        b += 1
+    return b
+
+
+def unpack(words, n):
+    """(..., W) uint32 packed bitset -> (..., n) bool."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.take(words, idx >> 5, axis=-1)
+    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+
+
+def popcount(words):
+    """(..., W) -> (...,) int32 set size."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                   axis=-1)
+
+
+def eye_words(n, w):
+    """(n, W) identity bitset matrix, built from iota (capture-free)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, w), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, w), 1)
+    return jnp.where(cols == (rows >> 5),
+                     U32(1) << (rows & 31).astype(U32), U32(0))
+
+
+def onehot_words(i, w):
+    """(...,) int32 vertex ids -> (..., W) single-bit masks."""
+    words = jnp.arange(w, dtype=jnp.int32)
+    return jnp.where(words == (i[..., None] >> 5),
+                     U32(1) << (i[..., None] & 31).astype(U32), U32(0))
+
+
+def full_words(n, w):
+    """(W,) bitset of the full universe {0..n-1} (capture-free)."""
+    full = jnp.full((w,), U32(0xFFFFFFFF))
+    rem = n - 32 * (n // 32)
+    last = n // 32
+    mask = jnp.where(jnp.arange(w) < last, full,
+                     jnp.where(jnp.arange(w) == last,
+                               (U32(1) << U32(rem)) - U32(1) if rem else U32(0),
+                               U32(0)))
+    if n % 32 == 0:
+        mask = jnp.where(jnp.arange(w) < n // 32, full, U32(0))
+    return mask
+
+
+def bor_matmul(mask, rows, n):
+    """Batched OR-AND semiring product.
+
+    mask (B, n, W), rows (B, n, W) -> out (B, n, W):
+      out[b, i] = OR_j { rows[b, j] : bit j of mask[b, i] }.
+    """
+    bits = unpack(mask, n)                         # (B, n, n)
+    sel = jnp.where(bits[..., None], rows[:, None, :, :], U32(0))
+    return jax.lax.reduce(sel, U32(0), jax.lax.bitwise_or, (2,))
+
+
+def default_interpret() -> bool:
+    """Pallas runs natively on TPU; everywhere else use interpret mode."""
+    return jax.default_backend() != "tpu"

@@ -11,75 +11,56 @@ with a blocked, divergence-free bitset fixpoint executed on the VPU:
   * the component-closure doubling loop has a static trip count
     ceil(log2 n) — zero branch divergence by construction.
 
-The kernel computes deg_S(v) for all (state, v) pairs in the block; child
-construction / dedup happen outside (they are memory ops, not compute).
-Validated in interpret mode against ``ref.expand_ref`` and the python DFS
-oracle (tests/test_kernels_expand.py).
+``reach_block`` is the factored kernel body: the closure/reach/degree math
+shared with the fused wavefront kernel (``repro.kernels.wavefront``), which
+composes it with feasibility masking and the pruning rules in one VMEM
+pass.  This standalone kernel emits only deg_S(v); child construction /
+dedup happen outside.  Validated in interpret mode against ``ref.expand_ref``
+and the python DFS oracle (tests/test_kernels_expand.py).
 """
 from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import common
+
 U32 = jnp.uint32
 
 
-def _log2_ceil(n: int) -> int:
-    b = 1
-    while (1 << b) < n:
-        b += 1
-    return b
+def reach_block(adj, states, *, n: int):
+    """Closure + reach + degrees for a block of states, all in registers/VMEM.
 
-
-def _unpack(words, n):
-    """(..., W) uint32 -> (..., n) bool."""
-    idx = jnp.arange(n, dtype=jnp.int32)
-    w = jnp.take(words, idx >> 5, axis=-1)
-    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
-
-
-def _bor_matmul(mask, rows, n):
-    """Batched OR-AND semiring product.
-
-    mask (B, n, W), rows (B, n, W) -> out (B, n, W):
-      out[b, i] = OR_j { rows[b, j] : bit j of mask[b, i] }.
+    adj (n, W) uint32; states (B, W) uint32 ->
+      (deg (B, n) int32, reach (B, n, W) uint32, q (B, n, W) uint32)
+    where reach[b, v] is the eliminated-graph adjacency row of v under
+    state b and q = reach \\ S \\ {v} (the paper's Q(S, v) set).
+    Rows for v in S are garbage; callers mask them.
     """
-    bits = _unpack(mask, n)                        # (B, n, n)
-    sel = jnp.where(bits[..., None], rows[:, None, :, :], U32(0))
-    return jax.lax.reduce(sel, U32(0), jax.lax.bitwise_or, (2,))
-
-
-def _eye_words(n, w):
-    """Identity bitset matrix built from iota (Pallas kernels cannot capture
-    host constants)."""
-    rows = jax.lax.broadcasted_iota(jnp.int32, (n, w), 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (n, w), 1)
-    return jnp.where(cols == (rows >> 5),
-                     U32(1) << (rows & 31).astype(U32), U32(0))
-
-
-def _expand_kernel(adj_ref, states_ref, deg_ref, *, n: int, steps: int):
-    adj = adj_ref[...]                             # (n, W)   VMEM-resident
-    states = states_ref[...]                       # (B, W)
     b, w = states.shape
-    eye = _eye_words(n, w)
+    eye = common.eye_words(n, w)
+    steps = common.log2_ceil(max(n, 2))
 
-    s_bits = _unpack(states, n)                    # (B, n)
+    s_bits = common.unpack(states, n)              # (B, n)
     masked_adj = adj[None, :, :] & states[:, None, :]      # N(i) ∩ S
     z = jnp.where(s_bits[:, :, None], masked_adj | eye[None], U32(0))
 
     for _ in range(steps):                         # static: no divergence
-        z = z | _bor_matmul(z, z, n)
+        z = z | common.bor_matmul(z, z, n)
 
     rows_adj = jnp.broadcast_to(adj[None], (b, n, w))
-    nb = _bor_matmul(z, rows_adj, n)               # N(component(i))
-    reach = adj[None] | _bor_matmul(masked_adj, nb, n)
+    nb = common.bor_matmul(z, rows_adj, n)         # N(component(i))
+    reach = adj[None] | common.bor_matmul(masked_adj, nb, n)
     q = (reach & ~states[:, None, :]) & ~eye[None]
-    deg = jnp.sum(jax.lax.population_count(q).astype(jnp.int32), axis=-1)
+    deg = common.popcount(q)
+    return deg, reach, q
+
+
+def _expand_kernel(adj_ref, states_ref, deg_ref, *, n: int):
+    deg, _reach, _q = reach_block(adj_ref[...], states_ref[...], n=n)
     deg_ref[...] = deg                             # (B, n)
 
 
@@ -91,8 +72,7 @@ def expand_degrees_pallas(adj: jnp.ndarray, states: jnp.ndarray, *, n: int,
     bt, w = states.shape
     assert bt % block == 0, (bt, block)
     grid = (bt // block,)
-    steps = _log2_ceil(max(n, 2))
-    kernel = functools.partial(_expand_kernel, n=n, steps=steps)
+    kernel = functools.partial(_expand_kernel, n=n)
     return pl.pallas_call(
         kernel,
         grid=grid,

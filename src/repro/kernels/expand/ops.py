@@ -6,12 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from .kernel import expand_degrees_pallas
-
-
-def default_interpret() -> bool:
-    """Pallas runs natively on TPU; everywhere else use interpret mode."""
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))

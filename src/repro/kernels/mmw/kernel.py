@@ -9,6 +9,10 @@ writes — with a **static trip count** of n-1 contraction steps and per-state
 done-masking instead of divergent early exit (the branch-divergence story of
 the paper's §4.5, resolved structurally).
 
+``mmw_block`` is the factored kernel body; the fused wavefront kernel
+(``repro.kernels.wavefront``) reuses it on the reach tiles it already holds
+in VMEM, so the prune never materialises reach in HBM.
+
 Grid: one step per state block; everything stays in VMEM
 (block x n x W uint32 ~ 64 KiB at n=64, W=2, block=128).
 """
@@ -20,70 +24,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import common
+
 U32 = jnp.uint32
 BIG = 1 << 20          # python int: pallas kernels cannot capture arrays
 
 
-def _unpack(words, n):
-    idx = jnp.arange(n, dtype=jnp.int32)
-    w = jnp.take(words, idx >> 5, axis=-1)
-    return ((w >> (idx & 31).astype(U32)) & U32(1)).astype(jnp.bool_)
+def mmw_block(reach, states, kk, *, n: int):
+    """Batched minor-min-width bounds, pure jnp (runs inside any kernel).
 
-
-def _onehot_words(i, w):
-    # i: (...,) int32 -> (..., w) uint32 single-bit masks
-    words = jnp.arange(w, dtype=jnp.int32)
-    return jnp.where(words == (i[..., None] >> 5),
-                     U32(1) << (i[..., None] & 31).astype(U32), U32(0))
-
-
-def _eye_words(n, w):
-    rows = jax.lax.broadcasted_iota(jnp.int32, (n, w), 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (n, w), 1)
-    return jnp.where(cols == (rows >> 5),
-                     U32(1) << (rows & 31).astype(U32), U32(0))
-
-
-def _full_words(n, w):
-    rows = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)[0]
-    full = jnp.full((w,), U32(0xFFFFFFFF))
-    rem = n - 32 * (n // 32)
-    last = n // 32
-    mask = jnp.where(jnp.arange(w) < last, full,
-                     jnp.where(jnp.arange(w) == last,
-                               (U32(1) << U32(rem)) - U32(1) if rem else U32(0),
-                               U32(0)))
-    if n % 32 == 0:
-        mask = jnp.where(jnp.arange(w) < n // 32, full, U32(0))
-    del rows
-    return mask
-
-
-def _popcount(words):
-    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
-                   axis=-1)
-
-
-def _mmw_kernel(reach_ref, states_ref, k_ref, lb_ref, *, n: int):
-    reach = reach_ref[...]                    # (B, n, W)
-    states = states_ref[...]                  # (B, W)
-    kk = k_ref[0]
+    reach (B, n, W) uint32 eliminated-graph rows; states (B, W); kk scalar
+    int32.  Returns (B,) int32 bounds; values freeze once > kk, matching
+    ``repro.core.mmw.mmw_bound``'s early exit bit for bit.
+    """
     b, _, w = reach.shape
-    eye = _eye_words(n, w)
-    universe = _full_words(n, w)
+    eye = common.eye_words(n, w)
+    universe = common.full_words(n, w)
 
     active = universe[None, :] & ~states                     # (B, W)
-    act_bits = _unpack(active, n)                            # (B, n)
+    act_bits = common.unpack(active, n)                      # (B, n)
     adjm = jnp.where(act_bits[..., None],
                      (reach & active[:, None, :]) & ~eye[None], U32(0))
     lb = jnp.zeros((b,), jnp.int32)
-    nact = _popcount(active)
+    nact = common.popcount(active)
 
     def step(_, carry):
         adjm, active, lb, nact = carry
-        act_bits = _unpack(active, n)                        # (B, n)
+        act_bits = common.unpack(active, n)                  # (B, n)
         live = (nact > 1) & (lb <= kk)                       # done-masking
-        d = jnp.where(act_bits, _popcount(adjm), BIG)        # (B, n)
+        d = jnp.where(act_bits, common.popcount(adjm), BIG)  # (B, n)
         v = jnp.argmin(d, axis=-1).astype(jnp.int32)         # (B,)
         dv = jnp.take_along_axis(d, v[:, None], axis=-1)[:, 0]
         d2 = jnp.where(
@@ -94,15 +63,15 @@ def _mmw_kernel(reach_ref, states_ref, k_ref, lb_ref, *, n: int):
                                            jnp.minimum(second, BIG - 1), 0))
         vrow = jnp.take_along_axis(
             adjm, v[:, None, None].repeat(w, axis=-1), axis=1)[:, 0]
-        nb_bits = _unpack(vrow, n)
+        nb_bits = common.unpack(vrow, n)
         dn = jnp.where(nb_bits, d, BIG)
         u = jnp.where(dv > 0, jnp.argmin(dn, axis=-1), v).astype(jnp.int32)
-        uhot = _onehot_words(u, w)                           # (B, W)
-        vhot = _onehot_words(v, w)
+        uhot = common.onehot_words(u, w)                     # (B, W)
+        vhot = common.onehot_words(v, w)
         urow = jnp.take_along_axis(
             adjm, u[:, None, None].repeat(w, axis=-1), axis=1)[:, 0]
         merged = (vrow | urow) & active & ~uhot & ~vhot
-        merged_bits = _unpack(merged, n)                     # (B, n)
+        merged_bits = common.unpack(merged, n)               # (B, n)
         adjm2 = adjm & ~uhot[:, None, :]
         adjm2 = jnp.where(merged_bits[..., None],
                           adjm2 | vhot[:, None, :],
@@ -122,7 +91,11 @@ def _mmw_kernel(reach_ref, states_ref, k_ref, lb_ref, *, n: int):
 
     _, _, lb, _ = jax.lax.fori_loop(0, max(n - 1, 1), step,
                                     (adjm, active, lb, nact))
-    lb_ref[...] = lb
+    return lb
+
+
+def _mmw_kernel(reach_ref, states_ref, k_ref, lb_ref, *, n: int):
+    lb_ref[...] = mmw_block(reach_ref[...], states_ref[...], k_ref[0], n=n)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))

@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from .kernel import mmw_bounds_pallas
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))

@@ -1,0 +1,2 @@
+from .ops import wavefront_expand
+from .ref import wavefront_ref

@@ -1,0 +1,50 @@
+"""Jit'd public wrapper for the fused wavefront kernel.
+
+``wavefront_expand`` is the pallas implementation of the backend registry's
+``wavefront_expand`` op (see ``repro.core.backend``): same signature as the
+jax reference composition in ``repro.core.expand.wavefront_expand``, same
+outputs bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from .kernel import wavefront_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n", "schedule", "use_mmw",
+                                             "use_simplicial", "block",
+                                             "interpret"))
+def wavefront_expand(adj, states, valid, k, allowed, *, n: int,
+                     schedule: str = "doubling", use_mmw: bool = False,
+                     use_simplicial: bool = False, block: int = 8,
+                     interpret: bool | None = None):
+    """Fused expand + feasibility + pruning, padding to the kernel block.
+
+    adj (n, W) uint32; states (B, W) uint32; valid (B,) bool; k scalar
+    int32; allowed (W,) uint32 -> (children (B, n, W), feasible (B, n) bool).
+    """
+    if schedule != "doubling":
+        # the registry rejects this combination before dispatch; this guard
+        # catches direct callers
+        raise ValueError(
+            f"pallas wavefront kernel fuses the closure fixpoint with a "
+            f"static doubling schedule; schedule={schedule!r} is jax-only")
+    if interpret is None:
+        interpret = default_interpret()
+    b, w = states.shape
+    pad = (-b) % block
+    if pad:
+        states = jnp.concatenate(
+            [states, jnp.zeros((pad, w), dtype=states.dtype)], axis=0)
+        valid = jnp.concatenate(
+            [valid, jnp.zeros((pad,), dtype=bool)], axis=0)
+    kdev = jnp.asarray(k, jnp.int32).reshape(1)
+    children, feas = wavefront_pallas(
+        adj, states, valid, kdev, allowed, n=n, block=block,
+        use_mmw=use_mmw, use_simplicial=use_simplicial, interpret=interpret)
+    return children[:b], feas[:b].astype(jnp.bool_)

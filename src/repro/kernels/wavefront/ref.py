@@ -1,0 +1,12 @@
+"""Reference for the fused wavefront kernel: the jax backend composition.
+
+The kernel's contract is exactly "what the jax backend computes, in one
+VMEM pass": expand -> feasibility -> simplicial collapse -> MMW prune.
+The reference therefore *is* the registered jax implementation
+(``repro.core.expand.wavefront_expand``), which is itself validated against
+the python DFS / simplicial / MMW oracles in the core test suite — the
+same layering as ``repro.kernels.mmw.ref``.
+"""
+from __future__ import annotations
+
+from repro.core.expand import wavefront_expand as wavefront_ref  # noqa: F401

@@ -2,8 +2,14 @@
 
     python -m repro.launch.solve --graph queen5_5
     python -m repro.launch.solve --graph myciel4 --mode bloom --mmw
+    python -m repro.launch.solve --graph myciel3 --backend pallas --simplicial
     python -m repro.launch.solve --graph queen6_6 --distributed --devices 8
     python -m repro.launch.solve --dimacs path/to/graph.gr
+
+``--backend`` selects the op implementations through the registry
+(``repro.core.backend``): "jax" reference or the fused Pallas wavefront
+kernel ("pallas"; interpret mode off-TPU).  Unsupported combinations are
+rejected here with a capability error before anything is traced.
 """
 from __future__ import annotations
 
@@ -24,9 +30,15 @@ def main(argv=None):
                     help="wavefront driver: device-resident while_loop "
                          "(one dispatch per k) or per-level host loop")
     ap.add_argument("--mmw", action="store_true")
-    ap.add_argument("--impl", default="jax", choices=["jax", "pallas"])
+    ap.add_argument("--simplicial", action="store_true",
+                    help="enable simplicial-vertex branch collapse")
+    ap.add_argument("--backend", default="jax", choices=["jax", "pallas"],
+                    help="op implementations (repro.core.backend registry): "
+                         "jax reference or fused pallas kernels")
+    ap.add_argument("--impl", default=None, choices=["jax", "pallas"],
+                    help=argparse.SUPPRESS)   # deprecated alias of --backend
     ap.add_argument("--schedule", default="doubling",
-                    choices=["doubling", "while", "linear"])
+                    choices=["doubling", "while", "linear", "matmul"])
     ap.add_argument("--no-paths", action="store_true")
     ap.add_argument("--no-clique", action="store_true")
     ap.add_argument("--no-preprocess", action="store_true")
@@ -40,10 +52,24 @@ def main(argv=None):
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
+    if args.impl is not None:
+        print("[solve] --impl is deprecated; use --backend", file=sys.stderr)
+        args.backend = args.impl
 
+    from repro.core import backend as backend_lib
     from repro.core import distributed as dist_lib
     from repro.core import graph as graph_lib
     from repro.core import solver as solver_lib
+
+    # fail on unsupported backend/flag combos here, with an actionable
+    # message, instead of deep inside a jit
+    try:
+        backend_lib.validate(args.backend, mode=args.mode,
+                             schedule=args.schedule, use_mmw=args.mmw,
+                             use_simplicial=args.simplicial)
+    except backend_lib.BackendCapabilityError as e:
+        print(f"[solve] unsupported configuration: {e}", file=sys.stderr)
+        return 2
 
     if args.dimacs:
         g = graph_lib.read_dimacs(args.dimacs)
@@ -60,14 +86,16 @@ def main(argv=None):
         res = dist_lib.solve_distributed(
             g, mesh, cap_local=args.cap // max(1, mesh.devices.size),
             block=args.block, use_mmw=args.mmw,
-            schedule=args.schedule, impl=args.impl,
+            use_simplicial=args.simplicial,
+            schedule=args.schedule, backend=args.backend,
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess, verbose=args.verbose,
             engine=args.engine)
     else:
         res = solver_lib.solve(
             g, cap=args.cap, block=args.block, mode=args.mode,
-            use_mmw=args.mmw, impl=args.impl, schedule=args.schedule,
+            use_mmw=args.mmw, backend=args.backend, schedule=args.schedule,
+            use_simplicial=args.simplicial,
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess,
             reconstruct=args.reconstruct, verbose=args.verbose,

@@ -124,3 +124,34 @@ def test_fused_engine_parity_distributed():
         print("DIST-PARITY-OK")
     """)
     assert "DIST-PARITY-OK" in stdout
+
+
+def test_simplicial_and_backend_distributed():
+    """use_simplicial is honoured (not silently dropped) by the distributed
+    solver, and the pallas backend matches jax bit-for-bit there too."""
+    stdout = _run("""
+        from repro.core import distributed, graph, solver
+        mesh = distributed.make_solver_mesh()
+        g = graph.random_tree(12, 5)
+        # trees collapse to a single chain per level under simplicial
+        # pruning, so the flag reaching the kernels shows up as a large
+        # expanded-count reduction at k=1 (bounds short-circuit solve(),
+        # hence decide at fixed k)
+        kw = dict(cap_local=1 << 10, block=32)
+        feas_p, _, exp_plain = distributed.decide_distributed(
+            g, 1, [], mesh, **kw)
+        feas_s, _, exp_simp = distributed.decide_distributed(
+            g, 1, [], mesh, use_simplicial=True, **kw)
+        assert feas_p and feas_s
+        assert exp_simp < exp_plain, (exp_simp, exp_plain)
+        single = solver.decide(g, 1, [], cap=1 << 12, block=32,
+                               mode="sort", use_mmw=False, m_bits=1 << 10,
+                               k_hashes=4, schedule="doubling",
+                               use_simplicial=True)
+        assert single.feasible and single.expanded == exp_simp
+        feas_pal, _, exp_pal = distributed.decide_distributed(
+            g, 1, [], mesh, use_simplicial=True, backend="pallas", **kw)
+        assert feas_pal and exp_pal == exp_simp
+        print("SIMPLICIAL-DIST-OK")
+    """, devices=4)
+    assert "SIMPLICIAL-DIST-OK" in stdout

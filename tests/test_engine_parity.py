@@ -1,10 +1,17 @@
-"""Fused (device-resident) engine vs host-loop engine parity.
+"""Engine and backend parity: host vs fused, jax vs pallas, bit for bit.
 
 The fused engine must be a pure performance transform: same frontiers, same
 verdicts, same drop accounting, bit for bit.  Both engines are driven with
 the same pinned ``block`` so their chunk partitioning — and therefore their
 dedup and overflow behaviour — is identical; any divergence is a bug in the
 while_loop fusion, not legitimate nondeterminism.
+
+The same contract holds across the backend axis (ISSUE 2): the fused
+pallas wavefront kernel dispatched by ``backend="pallas"`` must reproduce
+the jax reference composition exactly, for every engine × dedup mode ×
+pruning flag — pinned here as a backend × engine matrix on interpret-mode
+pallas, with registry capability errors for the combinations that are
+genuinely unsupported.
 
 Also pins the engine's contract: O(1) dispatches/host syncs per decide, and
 end-to-end ``solve`` agreement with a pure-python Held-Karp treewidth
@@ -16,6 +23,7 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core import bitset, engine, expand, frontier as frontier_lib
 from repro.core import graph, solver
 
@@ -68,7 +76,7 @@ def test_frontier_parity_random_graphs(cfg, seed):
         return
     adj, allowed = _devify(g)
     kw = dict(n=n, cap=cap, m_bits=1 << 12, k_hashes=4,
-              schedule="doubling", impl="jax", **cfg)
+              schedule="doubling", backend="jax", **cfg)
 
     fr_h, exp_h, drop_h = _host_levels(adj, allowed, k, target, **kw)
     feas_f, inexact_f, exp_f, fr_f = engine.fused_decide(
@@ -115,6 +123,71 @@ def test_fused_decide_is_one_dispatch_one_sync():
     # grow with the instance instead of staying O(1)
     assert engine.COUNTERS["dispatches"] > 10
     assert engine.COUNTERS["host_syncs"] > 10
+
+
+# ---------------------------------------------------- backend x engine matrix
+
+BACKENDS = ["jax", "pallas"]
+
+
+@pytest.mark.parametrize("mode", ["sort", "bloom"])
+@pytest.mark.parametrize("eng", ["host", "fused"])
+def test_backend_engine_matrix_decide_parity(eng, mode):
+    """jax vs pallas (interpret mode), per engine and dedup mode, with both
+    pruning rules enabled: identical verdict / inexact / expanded across k."""
+    g = graph.petersen()
+    results = {}
+    for backend in BACKENDS:
+        kw = dict(cap=1 << 10, block=BLOCK, mode=mode, m_bits=1 << 12,
+                  k_hashes=4, schedule="doubling", use_mmw=True,
+                  use_simplicial=True, backend=backend)
+        results[backend] = [solver.decide(g, k, [], engine=eng, **kw)
+                            for k in range(2, 6)]
+    for k, (a, b) in enumerate(zip(results["jax"], results["pallas"])):
+        assert (a.feasible, a.inexact, a.expanded) == \
+            (b.feasible, b.inexact, b.expanded), (eng, mode, k + 2, a, b)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
+def test_backend_frontier_bit_parity(cfg):
+    """Final frontier buffers identical between backends, per dedup/prune
+    config — the fused pallas kernel is a pure performance transform."""
+    for seed in (0, 1):
+        n, cap = 10, 256
+        g = graph.gnp(n, 0.35, seed)
+        k = 3
+        target = n - (k + 1)
+        adj, allowed = _devify(g)
+        out = {}
+        for backend in BACKENDS:
+            out[backend] = engine.fused_decide(
+                adj, allowed, k, target, n=n, cap=cap, block=BLOCK,
+                m_bits=1 << 12, k_hashes=4, schedule="doubling",
+                backend=backend, **cfg)
+        (feas_j, inex_j, exp_j, fr_j) = out["jax"]
+        (feas_p, inex_p, exp_p, fr_p) = out["pallas"]
+        assert (feas_j, inex_j, exp_j) == (feas_p, inex_p, exp_p)
+        assert int(fr_j.count) == int(fr_p.count)
+        assert int(fr_j.dropped) == int(fr_p.dropped)
+        np.testing.assert_array_equal(np.asarray(fr_j.states),
+                                      np.asarray(fr_p.states))
+
+
+def test_unsupported_backend_combos_fail_at_dispatch():
+    """The registry rejects genuinely unsupported combos with a capability
+    error at entry — not a TypeError mid-jit (the old impl= failure mode)."""
+    g = graph.petersen()
+    kw = dict(cap=1 << 8, block=BLOCK, mode="sort", use_mmw=False,
+              m_bits=1 << 10, k_hashes=4)
+    with pytest.raises(backend_lib.BackendCapabilityError):
+        solver.decide(g, 3, [], schedule="while", backend="pallas", **kw)
+    with pytest.raises(backend_lib.BackendCapabilityError):
+        solver.decide(g, 3, [], schedule="doubling", backend="rocm", **kw)
+    with pytest.raises(backend_lib.BackendCapabilityError):
+        engine.fused_decide(*_devify(g), 3, 5, n=g.n, cap=1 << 8,
+                            block=BLOCK, mode="bloom", use_mmw=False,
+                            m_bits=100, k_hashes=4, schedule="doubling",
+                            backend="pallas")
 
 
 def _tw_oracle(g):
