@@ -24,6 +24,11 @@ def main() -> None:
     from . import engine_sync
     engine_sync.run(full=full)
 
+    print("# batch_throughput: multi-lane engine vs sequential dispatches",
+          flush=True)
+    from . import batch_throughput
+    batch_throughput.run(full=full)
+
     print("# table2: work-size x memory sweep (paper Tables 2/3)",
           flush=True)
     from . import table2_worksize

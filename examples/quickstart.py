@@ -9,9 +9,11 @@ g = graph.queen(5)                       # 5x5 queen graph, tw = 18
 print(f"graph {g.name}: {g.n} vertices, {g.n_edges} edges")
 
 # solve: iterative-deepening wavefront DP (paper Listing 1) with exact
-# sort-based dedup; reconstruct returns a certified elimination order
-res = solver.solve(g, cap=1 << 16, block=1 << 10,
-                   use_preprocess=False, reconstruct=True)
+# sort-based dedup.  reconstruct=True returns a certified elimination
+# order — it composes with the default preprocessing (safe-separator
+# blocks are reconstructed individually and stitched back through the
+# preprocess vertex maps)
+res = solver.solve(g, cap=1 << 16, block=1 << 10, reconstruct=True)
 print(f"treewidth = {res.width} (exact={res.exact})")
 print(f"explored {res.expanded} states in {res.time_sec:.2f}s")
 
@@ -19,6 +21,12 @@ print(f"explored {res.expanded} states in {res.time_sec:.2f}s")
 width = solver.order_width(g, res.order)
 print(f"certificate: replaying the order gives width {width}")
 assert width == res.width
+
+# speculative deepening: decide several widths per dispatch through the
+# multi-lane engine (same results, fewer dispatches — see core/batch.py;
+# batch.solve_many batches across whole instance suites the same way)
+res_lanes = solver.solve(g, cap=1 << 16, block=1 << 10, lanes=4)
+assert res_lanes.width == res.width
 
 # paper-faithful Bloom-filter dedup (Monte Carlo) for comparison
 res_bloom = solver.solve(g, cap=1 << 16, block=1 << 10, mode="bloom",

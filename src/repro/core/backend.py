@@ -48,6 +48,14 @@ DEDUP_MODES: Tuple[str, ...] = ("sort", "bloom")
 JAX_SCHEDULES: Tuple[str, ...] = ("doubling", "while", "linear", "matmul")
 PALLAS_SCHEDULES: Tuple[str, ...] = ("doubling",)
 
+# backends whose ops are safe under a leading vmapped lane axis (the
+# multi-lane engine in ``core.batch``).  jax ops vmap trivially; the pallas
+# kernels batch through pallas_call's batching rule, which lifts the lane
+# axis into the grid — pinned bit-for-bit by tests/test_batch.py.  A future
+# backend whose kernels lack a batching rule must be left out of this set
+# so ``validate(lanes=...)`` rejects it at entry instead of mid-trace.
+BATCHED_BACKENDS: Tuple[str, ...] = ("jax", "pallas")
+
 
 class BackendCapabilityError(ValueError):
     """An op/backend/flag combination the registry cannot dispatch."""
@@ -102,17 +110,27 @@ def capability_table() -> Dict[str, Tuple[str, ...]]:
 def validate(backend: str, *, mode: str = "sort",
              schedule: str = "doubling", use_mmw: bool = False,
              use_simplicial: bool = False,
-             m_bits: Optional[int] = None) -> None:
+             m_bits: Optional[int] = None, lanes: int = 1) -> None:
     """Fail fast on solver configurations the backend cannot run.
 
     Called at every entry point (``solver.decide``, ``engine.fused_decide``,
-    ``distributed.decide_distributed``, the CLI) so an unsupported combo
-    surfaces as one actionable error before any tracing starts.
+    ``distributed.decide_distributed``, ``batch.decide_lanes``, the CLI) so
+    an unsupported combo surfaces as one actionable error before any
+    tracing starts.  ``lanes > 1`` additionally requires the backend's ops
+    to be vmap-safe (``BATCHED_BACKENDS``).
     """
     if backend not in BACKENDS:
         raise BackendCapabilityError(
             f"unknown backend {backend!r}; known backends: "
             f"{', '.join(BACKENDS)}")
+    if lanes < 1:
+        raise BackendCapabilityError(
+            f"lanes must be >= 1 (got {lanes})")
+    if lanes > 1 and backend not in BATCHED_BACKENDS:
+        raise BackendCapabilityError(
+            f"backend {backend!r} does not support the multi-lane engine "
+            f"(batched backends: {', '.join(BATCHED_BACKENDS)}); run with "
+            "lanes=1 or switch backend.")
     if mode not in DEDUP_MODES:
         raise BackendCapabilityError(
             f"unknown dedup mode {mode!r}; known modes: "

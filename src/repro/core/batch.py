@@ -1,0 +1,395 @@
+"""Batched multi-lane decide engine: one dispatch decides B subproblems.
+
+The fused engine (``core.engine``) already keeps a single ``decide(g, k)``
+on device, but the iterative-deepening driver and suite workloads still
+issue every decide as its own program — early levels and small instances
+leave the device nearly idle.  This module adds the missing batching axis
+(component-aware parallel branching in the GPU-vertex-cover sense: run
+independent subproblems concurrently until each saturates the device):
+
+  * ``_lanes_decide`` vmaps ``engine.decide_loop`` over a leading lane
+    axis.  Each lane carries its own padded ``(adj, allowed, k, target)``
+    and ``Frontier`` slice; the while_loop batching rule folds per-lane
+    early exit into the masked loop condition (a finished lane's carry is
+    frozen by ``select`` while the others keep stepping), so every lane's
+    result is bit-identical to running it alone.
+  * ``decide_lanes`` is the host entry: pad, pack, one dispatch, one sync.
+  * ``decide_batch(g, ks)`` — speculative deepening: decide
+    ``k, k+1, ..`` for one graph concurrently (used by
+    ``solver.solve_block(lanes=...)``; smallest feasible rung wins).
+  * ``solve_many(graphs)`` — suite driver: pads instances/biconnected
+    blocks to a common ``(n_max, W)`` and schedules lanes across the whole
+    suite, replicating ``solver.solve``'s per-instance semantics exactly
+    (same ``plan_block`` bounds, same skip rule, same accounting).
+
+Padding semantics: a lane of true size ``n_g`` is embedded at the bottom
+of the common ``n_max`` index space; padding vertices are isolated in
+``adj`` and cleared from ``allowed``, so they are never feasible
+candidates and never perturb closures — the DP explores exactly the real
+graph and frontier buffers match the unpadded run bit for bit (padded
+state words are zero, so sort order is preserved too).  Two documented
+caveats, both absent when lanes share one true ``n`` (e.g. speculative
+deepening): (1) MMW pruning sees the padding vertices as isolated
+degree-0 rows, which can only *weaken* the bound — verdicts are
+unchanged, but ``expanded`` under ``use_mmw=True`` may exceed the
+sequential count; (2) Bloom hashes cover all ``W`` words, so a lane
+padded to a larger word count draws a different (still Monte-Carlo
+correct) false-positive set than its sequential run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import backend as backend_lib
+from . import bitset, bloom
+from . import engine as engine_lib
+from . import frontier as frontier_lib
+from . import preprocess as preprocess_lib
+from .graph import Graph
+
+U32 = jnp.uint32
+
+# default lane width of one dispatch: enough to cover a suite round or a
+# deepening ladder without blowing the frontier-buffer footprint
+# (B * cap * W words resident per dispatch)
+DEFAULT_MAX_LANES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Lane:
+    """One subproblem: decide tw(g) <= k, skipping ``clique`` (never
+    eliminated — some optimal order ends with the max clique)."""
+    g: Graph
+    k: int
+    clique: tuple = ()
+
+
+@dataclasses.dataclass
+class LaneResult:
+    """Per-lane verdict; field-compatible with ``solver.DecideResult``
+    minus the host level snapshots (lanes never keep levels)."""
+    feasible: bool
+    inexact: bool
+    expanded: int
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
+                     "k_hashes", "schedule", "backend", "use_simplicial"))
+def _lanes_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
+                  use_mmw, m_bits, k_hashes, schedule, backend,
+                  use_simplicial):
+    """``engine.decide_loop`` vmapped over the leading lane axis.
+
+    adj (B, n, W) / allowed (B, W) / k, target (B,) / fr with lane-leading
+    leaves.  One compiled program, one launch, B verdicts."""
+    def one_lane(a, al, kk, tt, f):
+        return engine_lib.decide_loop(
+            a, al, kk, tt, f, n=n, cap=cap, block=block, mode=mode,
+            use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+            schedule=schedule, backend=backend,
+            use_simplicial=use_simplicial)
+    return jax.vmap(one_lane)(adj, allowed, k, target, fr)
+
+
+def _pack_lanes(lanes: Sequence[Lane], n_max: int, w: int):
+    """Host-side padding: embed every lane in the common (n_max, W) space.
+
+    Padding vertices stay isolated (zero adjacency rows) and are cleared
+    from ``allowed``; ``target`` counts the lane's *true* levels, so the
+    loop runs exactly as long as the unpadded decide would.  A lane whose
+    target is <= 0 is trivially feasible and exits before its first level
+    — the batched mirror of ``solver.decide``'s early return."""
+    b = len(lanes)
+    adj = np.zeros((b, n_max, w), dtype=np.uint32)
+    allowed = np.zeros((b, w), dtype=np.uint32)
+    ks = np.zeros((b,), dtype=np.int32)
+    targets = np.zeros((b,), dtype=np.int32)
+    for i, lane in enumerate(lanes):
+        p = lane.g.packed()
+        adj[i, :lane.g.n, :p.shape[1]] = p
+        allowed[i] = bitset.np_allowed(lane.g.n, lane.clique, w)
+        ks[i] = lane.k
+        targets[i] = max(0, lane.g.n - max(lane.k + 1, len(lane.clique)))
+    return adj, allowed, ks, targets
+
+
+_TRIVIAL = Graph(1, np.zeros((1, 1), dtype=bool), "pad")
+
+
+def decide_lanes(lanes: Sequence[Lane], *, cap: int, block: int, mode: str,
+                 use_mmw: bool, m_bits: int, k_hashes: int, schedule: str,
+                 backend: str = "jax", use_simplicial: bool = False,
+                 n_pad: Optional[int] = None,
+                 lane_pad: Optional[int] = None) -> List[LaneResult]:
+    """Decide every lane in one dispatch; one host sync for all verdicts.
+
+    ``n_pad`` pins the padded vertex count (callers batching many rounds
+    pass a global n_max so every round hits the same compiled program);
+    ``lane_pad`` rounds the lane axis up with trivial lanes for the same
+    reason (compiled-program cache keyed on B).
+    """
+    if not lanes:
+        return []
+    backend_lib.validate(backend, mode=mode, schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial,
+                         m_bits=m_bits, lanes=len(lanes))
+    block = engine_lib.validate_geometry(cap, block)
+    live = len(lanes)
+    n_max = max(lane.g.n for lane in lanes)
+    if n_pad is not None:
+        if n_pad < n_max:
+            raise ValueError(f"n_pad ({n_pad}) < largest lane n ({n_max})")
+        n_max = n_pad
+    n_max = max(1, n_max)
+    if lane_pad is not None and lane_pad > live:
+        lanes = list(lanes) + [Lane(_TRIVIAL, 0)] * (lane_pad - live)
+    w = bitset.n_words(n_max)
+
+    adj, allowed, ks, targets = _pack_lanes(lanes, n_max, w)
+    fr = frontier_lib.lane_frontiers(len(lanes), cap, w)
+    out_fr, _levels, expanded, dropped = _lanes_decide(
+        jnp.asarray(adj), jnp.asarray(allowed), jnp.asarray(ks),
+        jnp.asarray(targets), fr, n=n_max, cap=cap, block=block, mode=mode,
+        use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+        schedule=schedule, backend=backend, use_simplicial=use_simplicial)
+    engine_lib.count(dispatches=1)
+    counts_h, exp_h, drop_h = jax.device_get(
+        (out_fr.count, expanded, dropped))
+    engine_lib.count(host_syncs=1)
+    return [LaneResult(bool(counts_h[i] > 0), bool(drop_h[i] > 0),
+                       int(exp_h[i])) for i in range(live)]
+
+
+def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
+                 *, graphs: Optional[Sequence[Graph]] = None, cap: int,
+                 block: int, mode: str, use_mmw: bool, m_bits: int,
+                 k_hashes: int, schedule: str, backend: str = "jax",
+                 use_simplicial: bool = False) -> List[LaneResult]:
+    """Speculative deepening primitive: decide tw(g) <= k for several k in
+    one dispatch.
+
+    ``graphs`` optionally overrides the graph per rung — the deepening
+    driver passes the paths-rule-augmented ``G_k`` for each k (rule 2
+    admits more edges at higher k, so the lanes genuinely differ).  All
+    lanes share the true ``n``, so results are bit-identical to the
+    sequential ``decide`` loop for every mode/pruning combination."""
+    if graphs is not None and len(graphs) != len(ks):
+        raise ValueError("graphs must align with ks")
+    lanes = [Lane(graphs[i] if graphs is not None else g, int(k),
+                  tuple(clique)) for i, k in enumerate(ks)]
+    return decide_lanes(lanes, cap=cap, block=block, mode=mode,
+                        use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+                        schedule=schedule, backend=backend,
+                        use_simplicial=use_simplicial)
+
+
+# ----------------------------------------------------------- suite driver
+
+@dataclasses.dataclass
+class _Run:
+    """Iterative deepening in progress on one block (mirrors the ladder
+    state of ``solver.solve_block``)."""
+    plan: object                  # solver.BlockPlan
+    k: int
+    expanded: int = 0
+    any_inexact: bool = False
+    per_k: dict = dataclasses.field(default_factory=dict)
+
+
+class _Instance:
+    """One input graph's scheduler state: the solve()-shaped fold over its
+    preprocessed blocks (``solver.SuiteFold`` — the same accumulator
+    ``solve`` uses, so the two drivers cannot drift), advanced block by
+    block as lanes report back."""
+
+    def __init__(self, g: Graph, solver_lib, *, use_preprocess: bool,
+                 plan_kw: dict):
+        self.g = g
+        self.solver = solver_lib
+        self.plan_kw = plan_kw
+        self.t0 = time.time()
+        self.result: Optional[object] = None     # solver.SolveResult
+        self.run: Optional[_Run] = None
+        self.pre = use_preprocess
+        self.bi = 0
+        if g.n == 0:
+            self.parts: list = []
+            self.fold = None
+            self.result = solver_lib.SolveResult(0, True, 0, 0, 0, 0.0,
+                                                 [], {})
+            return
+        if use_preprocess:
+            pre = preprocess_lib.preprocess(g)
+            self.parts = [b.g for b in pre.blocks]
+            self.fold = solver_lib.SuiteFold.start(pre.lb)
+        else:
+            self.parts = [g]
+            self.fold = None      # single block: adopt its result wholesale
+        self._advance()
+
+    def max_n(self) -> int:
+        return max([p.n for p in self.parts], default=1)
+
+    def _fold(self, bres, name: str):
+        if not self.pre:
+            self.result = dataclasses.replace(
+                bres, time_sec=time.time() - self.t0)
+            return
+        self.fold.add(name, bres)
+
+    def _advance(self):
+        """Start the next runnable block, or finish the instance."""
+        while self.run is None and self.result is None:
+            if self.bi >= len(self.parts):
+                if self.pre:
+                    self.result = self.fold.result(time.time() - self.t0)
+                return
+            part = self.parts[self.bi]
+            self.bi += 1
+            if self.pre and self.fold.skip(part):
+                continue
+            plan = self.solver.plan_block(part, **self.plan_kw)
+            if plan.result is not None:
+                self._fold(plan.result, part.name)
+                continue
+            self.run = _Run(plan, k=plan.k0)
+
+    def finish_block(self, k_found: Optional[int]):
+        run = self.run
+        plan = run.plan
+        if k_found is not None:
+            bres = self.solver.SolveResult(
+                k_found, plan.exact_at(k_found, run.any_inexact), plan.lb,
+                plan.ub, run.expanded, 0.0, None, run.per_k)
+        else:
+            bres = self.solver.SolveResult(
+                plan.ub, not run.any_inexact, plan.lb, plan.ub,
+                run.expanded, 0.0, plan.ub_order, run.per_k)
+        self.run = None
+        self._fold(bres, plan.g.name)
+        self._advance()
+
+
+def solve_many(graphs: Sequence[Graph], *, cap: int = 1 << 17,
+               block: int = 1 << 11, mode: str = "sort",
+               use_mmw: bool = False, m_bits: int = 1 << 24,
+               k_hashes: int = bloom.DEFAULT_K,
+               schedule: Optional[str] = None, use_clique: bool = True,
+               use_paths: bool = True, use_preprocess: bool = True,
+               start_k: Optional[int] = None, verbose: bool = False,
+               backend: str = "jax", use_simplicial: bool = False,
+               lanes: int = DEFAULT_MAX_LANES,
+               speculate: int = 1) -> List[object]:
+    """Solve a whole suite with cross-instance lane batching.
+
+    Returns one ``solver.SolveResult`` per input, in input order, with the
+    exact widths/exactness/bounds/``per_k``/``expanded`` the sequential
+    ``[solve(g) for g in graphs]`` loop produces — subject to the two
+    padding caveats in the module docstring: under ``use_mmw=True`` the
+    padded lanes may expand a superset (verdicts unchanged), and under
+    ``mode="bloom"`` a lane padded into a larger word count than its
+    sequential run (instances straddling a multiple of 32 vertices) draws
+    a different Monte-Carlo false-positive set, so its width/exactness
+    carry the usual Bloom-mode probabilistic guarantee rather than
+    bit-parity with the sequential run.  The default configuration
+    (sort-mode dedup, no MMW) is exactly parity-pinned.  Instead of one
+    dispatch per (instance, k), every scheduler round packs all
+    instances' current deepening rungs into multi-lane dispatches of up to
+    ``lanes`` lanes.  ``speculate > 1`` additionally lets each instance
+    occupy that many consecutive-k lanes per round.
+
+    Reconstruction is not offered here (it needs per-level host snapshots,
+    which are single-lane by nature) — use ``solver.solve(reconstruct=
+    True)`` per instance for orders.
+    """
+    from . import solver as solver_lib   # lazy: solver imports this module
+
+    if schedule is None:
+        schedule = "doubling" if backend == "pallas" else "while"
+    lanes = int(lanes)
+    speculate = max(1, int(speculate))
+    backend_lib.validate(backend, mode=mode, schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial,
+                         m_bits=m_bits, lanes=lanes)
+    decide_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+                     m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+                     backend=backend, use_simplicial=use_simplicial)
+    plan_kw = dict(use_clique=use_clique, use_paths=use_paths,
+                   start_k=start_k)
+
+    insts = [_Instance(g, solver_lib, use_preprocess=use_preprocess,
+                       plan_kw=plan_kw) for g in graphs]
+    n_pad = max([i.max_n() for i in insts], default=1)
+
+    rnd = 0
+    while True:
+        live = [inst for inst in insts if inst.run is not None]
+        if not live:
+            break
+        sched = []
+        lane_list: list = []
+        for inst in live:
+            run = inst.run
+            ks = list(range(run.k, min(run.k + speculate, run.plan.ub)))
+            sched.append((inst, ks))
+            lane_list.extend(
+                Lane(run.plan.graph_at(kk), kk, tuple(run.plan.clique))
+                for kk in ks)
+        if verbose:
+            print(f"[solve_many] round {rnd}: {len(lane_list)} lanes over "
+                  f"{len(live)} instances", flush=True)
+        results: list = []
+        for lo in range(0, len(lane_list), lanes):
+            group = lane_list[lo:lo + lanes]
+            results.extend(decide_lanes(
+                group, n_pad=n_pad,
+                lane_pad=min(lanes, _pow2_at_least(len(group))),
+                **decide_kw))
+        pos = 0
+        for inst, ks in sched:
+            run = inst.run
+            rungs = results[pos:pos + len(ks)]
+            pos += len(ks)
+            k_found = None
+            for kk, res in zip(ks, rungs):
+                # sequential-ladder accounting: rungs above the first
+                # feasible one were never run sequentially — discard them
+                # uncounted
+                run.expanded += res.expanded
+                run.per_k[kk] = {"feasible": res.feasible,
+                                 "inexact": res.inexact,
+                                 "expanded": res.expanded}
+                if verbose:
+                    print(f"  [{run.plan.g.name}] k={kk} "
+                          f"feasible={res.feasible} "
+                          f"expanded={res.expanded} "
+                          f"inexact={res.inexact}", flush=True)
+                if res.feasible:
+                    k_found = kk
+                    break
+                if res.inexact:
+                    run.any_inexact = True
+            if k_found is not None:
+                inst.finish_block(k_found)
+            else:
+                run.k = ks[-1] + 1
+                if run.k >= run.plan.ub:
+                    inst.finish_block(None)
+        rnd += 1
+    return [inst.result for inst in insts]

@@ -117,3 +117,16 @@ def np_pack(sets, n: int) -> np.ndarray:
 def np_unpack(words: np.ndarray, n: int) -> list:
     """(W,) uint32 -> python set."""
     return {i for i in range(n) if (int(words[i >> 5]) >> (i & 31)) & 1}
+
+
+def np_allowed(n: int, skip=(), w: int = None) -> np.ndarray:
+    """Host-side candidate mask: bits 0..n-1 set except ``skip`` (the
+    clique skip set), zero-padded to ``w`` words when a lane lives in a
+    larger common word space.  Single source for ``solver.decide`` and the
+    multi-lane packer — the two must stay bit-identical for lane parity."""
+    full_words = np.asarray(full(n))
+    out = np.zeros(w if w is not None else len(full_words), dtype=np.uint32)
+    out[:len(full_words)] = full_words
+    for v in skip:
+        out[v >> 5] &= ~np.uint32(np.uint32(1) << np.uint32(v & 31))
+    return out

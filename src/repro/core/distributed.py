@@ -325,7 +325,7 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
     base_lb = 0
     if use_preprocess:
         pre = preprocess_lib.preprocess(g)
-        parts, base_lb = pre.blocks, pre.lb
+        parts, base_lb = [b.g for b in pre.blocks], pre.lb
 
     width, exact, expanded = base_lb, True, 0
     lbs = ubs = base_lb

@@ -143,7 +143,15 @@ def chunk_sweep(adj, allowed, k, states, count_, blk, *, n, cap, mode,
     distributed per-device expansion (which passes ``cross_dedup=False`` —
     its cross-chunk dedup happens at the owner after routing — and a
     ``max_chunks`` bound from its local capacity).  Returns
-    (out, ocount, dropped)."""
+    (out, ocount, dropped).
+
+    Lane-aware by construction: nothing here reads the true vertex count —
+    ``n`` only sizes the (static) candidate axis, while which vertices
+    exist rides in ``allowed`` and which rows are live rides in ``count_``.
+    The multi-lane engine exploits that by padding every lane to a common
+    ``n`` and vmapping the caller (``core.batch``); the chunk while_loop
+    then trips ``max_l ceil(count_l / blk)`` times with finished lanes'
+    carries frozen per the while_loop batching rule."""
     w = adj.shape[-1]
     zero = jnp.asarray(0, jnp.int32)
     out = jnp.zeros((cap, w), dtype=U32)
@@ -217,18 +225,24 @@ def _level_step(adj, allowed, k, fr, *, n, cap, block, mode, use_mmw,
                                  dropped.astype(jnp.int32))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
-                     "k_hashes", "schedule", "backend", "use_simplicial"))
-def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
-                  use_mmw, m_bits, k_hashes, schedule, backend,
-                  use_simplicial):
+def decide_loop(adj, allowed, k, target, fr, *, n, cap, block, mode,
+                use_mmw, m_bits, k_hashes, schedule, backend,
+                use_simplicial):
     """Run up to ``target`` wavefront levels; stop early on emptiness.
 
     Returns (frontier, levels_run, expanded, dropped_total) — all on
     device.  Feasibility is ``frontier.count > 0`` (the loop only stops
     short of ``target`` when a level produced no states).
+
+    Undecorated on purpose: ``fused_decide`` jits it for the single-lane
+    path, and the multi-lane engine (``core.batch``) vmaps it over a
+    leading lane axis.  Under vmap the two data-dependent ``while_loop``s
+    become masked loops — a lane whose condition goes false has its carry
+    frozen by the batching rule's ``select`` while other lanes keep
+    stepping, which is exactly the per-lane early exit the batched engine
+    needs (and why batched results stay bit-identical per lane).  ``n`` is
+    the (static) padded lane width; a lane's true vertex count is carried
+    dynamically by its ``allowed`` mask and ``target``.
     """
     zero = jnp.asarray(0, jnp.int32)
 
@@ -248,6 +262,13 @@ def _fused_decide(adj, allowed, k, target, fr, *, n, cap, block, mode,
     fr, level, expanded, dropped = jax.lax.while_loop(
         cond, body, (fr, zero, zero, zero))
     return fr, level, expanded, dropped
+
+
+_fused_decide = functools.partial(
+    jax.jit,
+    static_argnames=("n", "cap", "block", "mode", "use_mmw", "m_bits",
+                     "k_hashes", "schedule", "backend",
+                     "use_simplicial"))(decide_loop)
 
 
 def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,

@@ -10,6 +10,10 @@ capacity scales with the mesh in the distributed solver.
 (``repro.core.engine``) can carry it straight through ``lax.while_loop`` /
 ``lax.scan`` without unpacking — the whole ``decide`` recursion then runs
 as one compiled program with the frontier never leaving the device.
+
+The same pytree doubles as the multi-lane carry of ``core.batch``: a
+batched frontier simply gives every leaf a leading lane axis
+(``lane_frontiers``), and vmap maps the engine over it.
 """
 from __future__ import annotations
 
@@ -50,6 +54,26 @@ def empty_frontier(cap: int, w: int) -> Frontier:
     return Frontier(states=jnp.zeros((cap, w), dtype=jnp.uint32),
                     count=jnp.asarray(1, dtype=jnp.int32),
                     dropped=jnp.asarray(0, dtype=jnp.int32))
+
+
+def lane_frontiers(lanes: int, cap: int, w: int) -> Frontier:
+    """Batched DP roots: one ``{∅}`` frontier per lane.
+
+    Every leaf carries a leading ``lanes`` axis — states ``(lanes, cap,
+    W)``, count/dropped ``(lanes,)`` — so the same ``Frontier`` pytree
+    doubles as the carry of the vmapped multi-lane engine
+    (``core.batch``).  The scalar-frontier ``cap``/``w`` properties do not
+    apply to a batched instance (the shapes are shifted by the lane
+    axis)."""
+    return Frontier(states=jnp.zeros((lanes, cap, w), dtype=jnp.uint32),
+                    count=jnp.ones((lanes,), dtype=jnp.int32),
+                    dropped=jnp.zeros((lanes,), dtype=jnp.int32))
+
+
+def lane_to_host(f: Frontier, lane: int) -> np.ndarray:
+    """Materialise one lane's live rows from a batched frontier."""
+    c = int(f.count[lane])
+    return np.asarray(f.states[lane, :c])
 
 
 def blank_frontier(cap: int, w: int) -> Frontier:

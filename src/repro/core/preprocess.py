@@ -104,10 +104,16 @@ def simplicial_reduce(g: Graph) -> tuple:
     """Repeatedly remove simplicial vertices (N(v) is a clique).
 
     Safe: tw(G) = max(deg(v), tw(G - v)).  Returns (reduced graph,
-    lower bound from removed vertices, kept-vertex original ids)."""
+    lower bound from removed vertices, kept-vertex original ids,
+    removed-vertex original ids in removal order).  The removal order is
+    an elimination-order prefix: replaying it eliminates each vertex while
+    its neighborhood is a clique (degree = the recorded bound, no fill),
+    which is what lets ``stitch_block_orders`` splice the removals back
+    into a certified global order."""
     adj = g.adj.copy()
     alive = np.ones(g.n, dtype=bool)
     lb = 0
+    removed: list = []
     changed = True
     while changed:
         changed = False
@@ -118,6 +124,7 @@ def simplicial_reduce(g: Graph) -> tuple:
             d = len(nbrs)
             if d == 0:
                 alive[v] = False
+                removed.append(int(v))
                 changed = True
                 continue
             sub = adj[np.ix_(nbrs, nbrs)]
@@ -126,35 +133,115 @@ def simplicial_reduce(g: Graph) -> tuple:
                 adj[v, :] = False
                 adj[:, v] = False
                 alive[v] = False
+                removed.append(int(v))
                 changed = True
     keep = np.nonzero(alive)[0]
     if len(keep) == 0:
-        return Graph(0, np.zeros((0, 0), dtype=bool), g.name + "_red"), lb, keep
+        return (Graph(0, np.zeros((0, 0), dtype=bool), g.name + "_red"),
+                lb, keep, removed)
     sub = Graph(len(keep), adj[np.ix_(keep, keep)], g.name + "_red")
-    return sub, lb, keep
+    return sub, lb, keep, removed
+
+
+@dataclasses.dataclass
+class Block:
+    """One solver unit plus the vertex maps reconstruction needs.
+
+    ``g`` is the reduced block graph handed to the solver; ``vmap[i]`` is
+    the original-graph id of solver vertex ``i``; ``removed`` lists the
+    block-local simplicial reduction removals (original ids, removal
+    order); ``vertices`` is the full block vertex set in original ids —
+    including removed and articulation vertices — which is what the
+    stitcher's block-cut forest is built from.  A block can be fully
+    reduced away (``g.n == 0``): it is kept here anyway because its
+    vertices (e.g. both endpoints of a bridge) still have to be placed in
+    the global elimination order."""
+    g: Graph
+    vmap: np.ndarray
+    removed: list
+    vertices: list
 
 
 @dataclasses.dataclass
 class Preprocessed:
-    blocks: list          # list of Graph
+    blocks: list          # list of Block, largest solver graph first
     lb: int               # lower bound established by reductions
     original: Graph
+    removed: list         # top-level reduction removals (original ids, order)
 
 
 def preprocess(g: Graph, split_blocks: bool = True) -> Preprocessed:
     """Full pipeline: simplicial reduce -> biconnected blocks -> reduce each."""
-    red, lb, _ = simplicial_reduce(g)
+    red, lb, keep, removed0 = simplicial_reduce(g)
     parts: list = []
     if red.n:
         if split_blocks:
             for blk in biconnected_blocks(red):
-                if len(blk) >= 2:
-                    sub, lb2, _ = simplicial_reduce(red.subgraph(blk))
-                    lb = max(lb, lb2)
-                    if sub.n:
-                        parts.append(sub)
+                blk = sorted(blk)
+                orig = keep[np.asarray(blk, dtype=int)]   # red ids -> g ids
+                sub, lb2, keep2, rem2 = simplicial_reduce(red.subgraph(blk))
+                lb = max(lb, lb2)
+                vmap = (orig[np.asarray(keep2, dtype=int)] if sub.n
+                        else np.zeros(0, dtype=int))
+                parts.append(Block(sub, vmap,
+                                   [int(orig[v]) for v in rem2],
+                                   [int(v) for v in orig]))
         else:
-            parts.append(red)
+            parts.append(Block(red, keep.astype(int), [],
+                               [int(v) for v in keep]))
     # largest first: the hard block dominates runtime, fail fast
-    parts.sort(key=lambda s: -s.n)
-    return Preprocessed(parts, lb, g)
+    parts.sort(key=lambda b: -b.g.n)
+    return Preprocessed(parts, lb, g, removed0)
+
+
+def stitch_block_orders(pre: Preprocessed, block_orders: list) -> list:
+    """Stitch per-block elimination orders into one order for the original
+    graph, leaf-to-root over the block-cut forest.
+
+    ``block_orders[i]`` is an elimination order of ``pre.blocks[i].g`` in
+    block-local solver indices (``None`` means "any order" — used for
+    blocks the solver skipped because they cannot beat the width found so
+    far, where every order is within budget).
+
+    Why this preserves width: processing a leaf block eliminates its
+    vertices *except* the one articulation vertex it still shares with an
+    unprocessed block.  At that moment every neighbor of an eliminated
+    vertex lies inside the block (all other blocks containing it are
+    already collapsed into their articulation vertices), so replay degrees
+    equal the block-local ones; and restricting an elimination order to an
+    induced subgraph never increases its width (the restricted fill-in is
+    a subgraph of the restricted full fill-in).  Fill edges stay inside
+    the block, so the residual graph seen by later blocks is exactly the
+    original minus processed block interiors and the recursion goes
+    through.  Block-local reduction removals are replayed first — they are
+    simplicial at that point in the block, with degree bounded by the
+    reduction lower bound."""
+    full = []
+    for b, loc in zip(pre.blocks, block_orders):
+        loc = list(range(b.g.n)) if loc is None else list(loc)
+        full.append(list(b.removed) + [int(b.vmap[v]) for v in loc])
+    owner: dict = {}
+    for i, b in enumerate(pre.blocks):
+        for v in b.vertices:
+            owner.setdefault(v, set()).add(i)
+    remaining = set(range(len(pre.blocks)))
+    order = list(pre.removed)
+    done = set(order)
+    while remaining:
+        leaf = cut = None
+        for i in sorted(remaining):
+            shared = [v for v in pre.blocks[i].vertices
+                      if len(owner[v] & remaining) > 1]
+            if len(shared) <= 1:
+                leaf, cut = i, (shared[0] if shared else None)
+                break
+        assert leaf is not None, "block-cut forest has no leaf block"
+        for v in full[leaf]:
+            if v != cut and v not in done:
+                order.append(v)
+                done.add(v)
+        remaining.discard(leaf)
+    # isolated originals never entering any block (already in pre.removed
+    # for reduced graphs; this is a safety net for degenerate inputs)
+    order.extend(v for v in range(pre.original.n) if v not in done)
+    return order

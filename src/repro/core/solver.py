@@ -171,10 +171,7 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
 
     w = bitset.n_words(n)
     adj_dev = jnp.asarray(g.packed())
-    allowed = np.asarray(bitset.full(n)).copy()
-    for v in clique:
-        allowed[v >> 5] &= ~np.uint32(np.uint32(1) << np.uint32(v & 31))
-    allowed_dev = jnp.asarray(allowed)
+    allowed_dev = jnp.asarray(bitset.np_allowed(n, clique))
 
     if keep_levels:
         engine = "host"            # per-level snapshots need the host loop
@@ -275,54 +272,180 @@ class SolveResult:
     per_k: Optional[dict] = None
 
 
+@dataclasses.dataclass
+class BlockPlan:
+    """Everything iterative deepening needs to run one block.
+
+    Shared between ``solve_block`` (sequential and speculative lanes) and
+    ``batch.solve_many`` (cross-instance lanes) so the two drivers cannot
+    drift in bounds, start-k, or exactness semantics.  ``result`` is set
+    when no search is needed (trivial graph, ``lb >= ub``, or a forced
+    ``start_k`` at/above ``ub``); its ``time_sec`` is 0 and callers stamp
+    their own.
+    """
+    g: Graph
+    clique: list
+    lb: int
+    ub: int
+    ub_order: list
+    paths: Optional[np.ndarray]
+    k0: int              # first k of the deepening ladder
+    forced: bool         # k0 was pushed above the genuine lower bound
+    result: Optional[SolveResult] = None
+
+    def graph_at(self, k: int) -> Graph:
+        """G_k: the paper's rule-2 graph (improved edges for width k)."""
+        if self.paths is None:
+            return self.g
+        return self.g.with_edges(bounds.paths_edges(self.g, self.paths, k))
+
+    def exact_at(self, k: int, any_inexact: bool) -> bool:
+        """Is 'feasible at k' an exactness proof?  Only when no state was
+        dropped below k AND infeasibility of k-1 was actually established
+        — either k-1 < lb (genuine bound) or k-1 was decided in this run.
+        A user-forced ``start_k`` above lb satisfies neither at ``k0``."""
+        return (not any_inexact) and not (self.forced and k == self.k0)
+
+
+def plan_block(g: Graph, *, use_clique: bool, use_paths: bool,
+               start_k: Optional[int]) -> BlockPlan:
+    """Bounds + deepening schedule for one block.
+
+    ``start_k`` moves the ladder's starting rung but never the *reported*
+    lower bound: ``lb`` stays the genuine bound, and a start above it is
+    flagged ``forced`` so a feasible verdict at that rung cannot be
+    reported exact (nothing proved ``tw > start_k - 1``)."""
+    if g.n <= 1:
+        return BlockPlan(g, [], 0, 0, list(range(g.n)), None, 0, False,
+                         SolveResult(0, True, 0, 0, 0, 0.0,
+                                     list(range(g.n)), {}))
+    clique = bounds.greedy_max_clique(g) if use_clique else []
+    lb = max(bounds.lower_bound(g), len(clique) - 1)
+    ub, ub_order = bounds.upper_bound(g)
+    if lb >= ub:
+        return BlockPlan(g, clique, lb, ub, ub_order, None, lb, False,
+                         SolveResult(ub, True, lb, ub, 0, 0.0, ub_order, {}))
+    k0, forced = lb, False
+    if start_k is not None:
+        k0 = max(0, int(start_k))
+        forced = k0 > lb
+        if k0 >= ub:
+            warnings.warn(
+                f"start_k={start_k} >= upper bound {ub} for {g.name}: no "
+                "search performed, returning the heuristic ub as an "
+                "inexact result", stacklevel=3)
+            return BlockPlan(g, clique, lb, ub, ub_order, None, k0, forced,
+                             SolveResult(ub, False, lb, ub, 0, 0.0,
+                                         ub_order, {}))
+    paths = bounds.disjoint_paths_matrix(g, cap=ub) if use_paths else None
+    return BlockPlan(g, clique, lb, ub, ub_order, paths, k0, forced)
+
+
 def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
                 m_bits: int, k_hashes: int, schedule: str, use_clique: bool,
                 use_paths: bool, reconstruct: bool, start_k: Optional[int],
                 verbose: bool, backend: str = "jax",
                 use_simplicial: bool = False,
-                engine: str = "fused") -> SolveResult:
+                engine: str = "fused", lanes: int = 1) -> SolveResult:
+    """Iterative deepening on one (biconnected) block.
+
+    ``lanes > 1`` enables speculative deepening: ``decide`` for
+    ``k, k+1, ..., k+lanes-1`` runs as one multi-lane dispatch
+    (``batch.decide_batch``) and the smallest feasible rung wins.
+    Accounting mirrors the sequential ladder exactly — rungs above the
+    first feasible one are discarded uncounted — so widths, exactness,
+    ``expanded`` and ``per_k`` are bit-identical to ``lanes=1``.
+    Speculation needs the fused device loop and no level snapshots;
+    with ``engine="host"`` or ``reconstruct=True`` it falls back to
+    sequential rungs."""
     t0 = time.time()
-    if g.n <= 1:
-        return SolveResult(0, True, 0, 0, 0, time.time() - t0, list(range(g.n)), {})
+    plan = plan_block(g, use_clique=use_clique, use_paths=use_paths,
+                      start_k=start_k)
+    if plan.result is not None:
+        return dataclasses.replace(plan.result, time_sec=time.time() - t0)
 
-    clique = bounds.greedy_max_clique(g) if use_clique else []
-    lb = max(bounds.lower_bound(g), len(clique) - 1)
-    ub, ub_order = bounds.upper_bound(g)
-    if start_k is not None:
-        lb = start_k
+    spec = max(1, int(lanes))
+    if spec > 1 and (reconstruct or engine != "fused"):
+        spec = 1          # snapshots/host loop are single-lane only
+    decide_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+                     m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+                     backend=backend, use_simplicial=use_simplicial)
     per_k: dict = {}
-    if lb >= ub:
-        return SolveResult(ub, True, lb, ub, 0, time.time() - t0, ub_order, per_k)
-
-    paths = bounds.disjoint_paths_matrix(g, cap=ub) if use_paths else None
     expanded_total = 0
     any_inexact = False
-    for k in range(lb, ub):
-        gk = g.with_edges(bounds.paths_edges(g, paths, k)) if use_paths else g
-        res = decide(gk, k, clique, cap=cap, block=block, mode=mode,
-                     use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-                     schedule=schedule, backend=backend,
-                     use_simplicial=use_simplicial,
-                     keep_levels=reconstruct, engine=engine)
-        expanded_total += res.expanded
-        per_k[k] = {"feasible": res.feasible, "inexact": res.inexact,
-                    "expanded": res.expanded}
-        if verbose:
-            print(f"  [{g.name}] k={k} feasible={res.feasible} "
-                  f"expanded={res.expanded} inexact={res.inexact}", flush=True)
-        if res.feasible:
-            order = None
-            if reconstruct:
-                order = reconstruct_order(gk, k, clique, res.levels)
-            return SolveResult(k, not any_inexact, lb, ub, expanded_total,
-                               time.time() - t0, order, per_k)
-        if res.inexact:
-            any_inexact = True
-            # a state leading to a width-k order may have been dropped:
-            # anything concluded beyond this k is a candidate value only
-            # (paper: struck-through entries). We keep going like the paper.
-    return SolveResult(ub, not any_inexact, lb, ub, expanded_total,
-                       time.time() - t0, ub_order, per_k)
+    k = plan.k0
+    while k < plan.ub:
+        ks = list(range(k, min(k + spec, plan.ub)))
+        if spec > 1:
+            from . import batch as batch_lib
+            results = batch_lib.decide_batch(
+                g, ks, plan.clique,
+                graphs=[plan.graph_at(kk) for kk in ks], **decide_kw)
+        else:
+            results = [decide(plan.graph_at(ks[0]), ks[0], plan.clique,
+                              keep_levels=reconstruct, engine=engine,
+                              **decide_kw)]
+        for kk, res in zip(ks, results):
+            expanded_total += res.expanded
+            per_k[kk] = {"feasible": res.feasible, "inexact": res.inexact,
+                         "expanded": res.expanded}
+            if verbose:
+                print(f"  [{g.name}] k={kk} feasible={res.feasible} "
+                      f"expanded={res.expanded} inexact={res.inexact}",
+                      flush=True)
+            if res.feasible:
+                order = None
+                if reconstruct:
+                    order = reconstruct_order(plan.graph_at(kk), kk,
+                                              plan.clique, res.levels)
+                return SolveResult(kk, plan.exact_at(kk, any_inexact),
+                                   plan.lb, plan.ub, expanded_total,
+                                   time.time() - t0, order, per_k)
+            if res.inexact:
+                any_inexact = True
+                # a state leading to a width-k order may have been dropped:
+                # anything concluded beyond this k is a candidate value only
+                # (paper: struck-through entries). We keep going like the
+                # paper.
+        k = ks[-1] + 1
+    return SolveResult(plan.ub, not any_inexact, plan.lb, plan.ub,
+                       expanded_total, time.time() - t0, plan.ub_order,
+                       per_k)
+
+
+@dataclasses.dataclass
+class SuiteFold:
+    """Accumulator folding per-block results into one instance result —
+    the single source of ``solve``'s preprocess-path semantics, shared
+    with ``batch.solve_many`` so the two drivers cannot drift."""
+    width: int
+    exact: bool = True
+    expanded: int = 0
+    lbs: int = 0
+    ubs: int = 0
+    per_k: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def start(cls, lb: int) -> "SuiteFold":
+        return cls(width=lb, lbs=lb, ubs=lb)
+
+    def skip(self, g: Graph) -> bool:
+        """A block can't beat the width found so far (and then any
+        elimination order of it fits the width budget)."""
+        return g.n - 1 <= self.width
+
+    def add(self, name: str, res: SolveResult) -> None:
+        self.width = max(self.width, res.width)
+        self.exact &= res.exact
+        self.expanded += res.expanded
+        self.lbs = max(self.lbs, res.lb)
+        self.ubs = max(self.ubs, res.ub)
+        self.per_k[name] = res.per_k
+
+    def result(self, elapsed: float, order=None) -> SolveResult:
+        return SolveResult(self.width, self.exact, self.lbs,
+                           max(self.ubs, self.width), self.expanded,
+                           elapsed, order, self.per_k)
 
 
 def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
@@ -332,7 +455,8 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
           use_preprocess: bool = True, reconstruct: bool = False,
           start_k: Optional[int] = None, verbose: bool = False,
           backend: str = "jax", use_simplicial: bool = False,
-          engine: str = "fused", impl: Optional[str] = None) -> SolveResult:
+          engine: str = "fused", lanes: int = 1,
+          impl: Optional[str] = None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
     ``engine`` selects the wavefront driver: "fused" (device-resident
@@ -342,6 +466,14 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
     (``repro.core.backend``): "jax" reference or fused "pallas" kernels.
     ``schedule=None`` resolves to the backend's default closure fixpoint
     ("while" for jax, the static "doubling" baked into the pallas kernels).
+    ``lanes > 1`` turns the deepening ladder speculative: each dispatch
+    decides ``lanes`` consecutive k concurrently through the multi-lane
+    engine (``core.batch``) — same results, fewer dispatches.
+    ``reconstruct=True`` returns a certified elimination order; with
+    preprocessing on, each block is reconstructed with the host engine and
+    the block-local orders are stitched back through the preprocess vertex
+    maps (``preprocess.stitch_block_orders``).  To batch *across*
+    instances, see ``batch.solve_many``.
     ``impl`` is the deprecated spelling of ``backend``."""
     t0 = time.time()
     if impl is not None:
@@ -352,36 +484,36 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
         schedule = "doubling" if backend == "pallas" else "while"
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
-                         m_bits=m_bits)
+                         m_bits=m_bits, lanes=int(lanes))
     if g.n == 0:
         return SolveResult(0, True, 0, 0, 0, 0.0, [], {})
+    solve_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+                    m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+                    use_clique=use_clique, use_paths=use_paths,
+                    start_k=start_k, verbose=verbose, backend=backend,
+                    use_simplicial=use_simplicial, engine=engine,
+                    lanes=lanes)
     if not use_preprocess:
-        res = solve_block(g, cap=cap, block=block, mode=mode, use_mmw=use_mmw,
-                          m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
-                          use_clique=use_clique, use_paths=use_paths,
-                          reconstruct=reconstruct, start_k=start_k,
-                          verbose=verbose, backend=backend,
-                          use_simplicial=use_simplicial, engine=engine)
-        return res
+        return solve_block(g, reconstruct=reconstruct, **solve_kw)
 
     pre = preprocess_lib.preprocess(g)
-    width, exact, expanded = pre.lb, True, 0
-    lbs, ubs = pre.lb, pre.lb
-    per_k: dict = {}
-    for part in pre.blocks:
-        if part.n - 1 <= width:      # a block can't beat the current width
+    fold = SuiteFold.start(pre.lb)
+    block_orders: list = [None] * len(pre.blocks)
+    for i, part in enumerate(pre.blocks):
+        if fold.skip(part.g):
             continue
-        res = solve_block(part, cap=cap, block=block, mode=mode,
-                          use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-                          schedule=schedule, use_clique=use_clique,
-                          use_paths=use_paths, reconstruct=False,
-                          start_k=start_k, verbose=verbose, backend=backend,
-                          use_simplicial=use_simplicial, engine=engine)
-        width = max(width, res.width)
-        exact &= res.exact
-        expanded += res.expanded
-        lbs = max(lbs, res.lb)
-        ubs = max(ubs, res.ub)
-        per_k[part.name] = res.per_k
-    return SolveResult(width, exact, lbs, max(ubs, width), expanded,
-                       time.time() - t0, None, per_k)
+        res = solve_block(part.g, reconstruct=reconstruct, **solve_kw)
+        fold.add(part.g.name, res)
+        block_orders[i] = res.order
+    order = None
+    if reconstruct:
+        order = preprocess_lib.stitch_block_orders(pre, block_orders)
+        replay = order_width(g, order)
+        if replay > fold.width:
+            warnings.warn(
+                f"stitched elimination order replays at width {replay} > "
+                f"computed width {fold.width}; dropping the order (please "
+                "report — this indicates a preprocess/stitch bug)",
+                stacklevel=2)
+            order = None
+    return fold.result(time.time() - t0, order)

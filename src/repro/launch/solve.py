@@ -4,7 +4,13 @@
     python -m repro.launch.solve --graph myciel4 --mode bloom --mmw
     python -m repro.launch.solve --graph myciel3 --backend pallas --simplicial
     python -m repro.launch.solve --graph queen6_6 --distributed --devices 8
+    python -m repro.launch.solve --graph myciel4 --batch 4
     python -m repro.launch.solve --dimacs path/to/graph.gr
+
+``--batch N`` runs the iterative-deepening ladder speculatively: each
+dispatch decides N consecutive widths through the multi-lane engine
+(``repro.core.batch``), and the smallest feasible one wins — same
+results, fewer dispatches.
 
 ``--backend`` selects the op implementations through the registry
 (``repro.core.backend``): "jax" reference or the fused Pallas wavefront
@@ -29,6 +35,11 @@ def main(argv=None):
     ap.add_argument("--engine", default="fused", choices=["fused", "host"],
                     help="wavefront driver: device-resident while_loop "
                          "(one dispatch per k) or per-level host loop")
+    ap.add_argument("--batch", type=int, default=1, metavar="LANES",
+                    help="speculative deepening width: decide k..k+LANES-1 "
+                         "concurrently in one multi-lane dispatch "
+                         "(core.batch; fused engine only, results "
+                         "bit-identical to --batch 1). Default 1")
     ap.add_argument("--mmw", action="store_true")
     ap.add_argument("--simplicial", action="store_true",
                     help="enable simplicial-vertex branch collapse")
@@ -66,7 +77,8 @@ def main(argv=None):
     try:
         backend_lib.validate(args.backend, mode=args.mode,
                              schedule=args.schedule, use_mmw=args.mmw,
-                             use_simplicial=args.simplicial)
+                             use_simplicial=args.simplicial,
+                             lanes=args.batch)
     except backend_lib.BackendCapabilityError as e:
         print(f"[solve] unsupported configuration: {e}", file=sys.stderr)
         return 2
@@ -81,6 +93,9 @@ def main(argv=None):
         return 2
 
     print(f"[solve] {g.name}: n={g.n} m={g.n_edges}", flush=True)
+    if args.distributed and args.batch > 1:
+        print("[solve] --batch applies to the single-device solver only; "
+              "ignoring it under --distributed", file=sys.stderr)
     if args.distributed:
         mesh = dist_lib.make_solver_mesh()
         res = dist_lib.solve_distributed(
@@ -99,7 +114,7 @@ def main(argv=None):
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess,
             reconstruct=args.reconstruct, verbose=args.verbose,
-            engine=args.engine)
+            engine=args.engine, lanes=args.batch)
 
     print(f"[solve] treewidth={res.width} exact={res.exact} "
           f"lb={res.lb} ub={res.ub} states_expanded={res.expanded} "

@@ -230,6 +230,58 @@ def test_solve_engine_agreement_end_to_end():
             (b.width, b.exact, b.expanded), (g.name, a, b)
 
 
+@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
+def test_lane_engine_frontier_bit_parity(cfg):
+    """The multi-lane engine (ISSUE 3) is a pure scheduling transform of
+    the fused engine: per-lane final frontier buffers — states, counts,
+    drop accounting — are bit-identical to running each (k) alone."""
+    from repro.core import batch, frontier as fr_lib
+
+    g = graph.gnp(11, 0.35, 5)
+    n, cap = g.n, 512
+    adj, allowed = _devify(g)
+    ks = [2, 3, 4, 5]
+    b = len(ks)
+    kw = dict(n=n, cap=cap, block=BLOCK, m_bits=1 << 12, k_hashes=4,
+              schedule="doubling", backend="jax", **cfg)
+    adj_b = jnp.broadcast_to(adj, (b,) + adj.shape)
+    al_b = jnp.broadcast_to(allowed, (b,) + allowed.shape)
+    fr_b = fr_lib.lane_frontiers(b, cap, adj.shape[-1])
+    out_fr, _lvl, exp_b, drop_b = batch._lanes_decide(
+        adj_b, al_b, jnp.asarray(ks, jnp.int32),
+        jnp.asarray([n - (k + 1) for k in ks], jnp.int32), fr_b, **kw)
+    for i, k in enumerate(ks):
+        feas, inexact, exp, fr_ref = engine.fused_decide(
+            adj, allowed, k, n - (k + 1), **kw)
+        assert exp == int(exp_b[i])
+        assert inexact == (int(drop_b[i]) > 0)
+        assert feas == (int(out_fr.count[i]) > 0)
+        np.testing.assert_array_equal(np.asarray(out_fr.states[i]),
+                                      np.asarray(fr_ref.states))
+        np.testing.assert_array_equal(
+            fr_lib.lane_to_host(out_fr, i),
+            np.asarray(fr_ref.states[:int(fr_ref.count)]))
+
+
+def test_solve_many_dispatch_reduction_quick_suite():
+    """Acceptance criterion (ISSUE 3): solve_many over the quick suite
+    matches sequential solve widths/exactness with fewer dispatches."""
+    from repro.core import batch
+    gs = [graph.REGISTRY[k]() for k in
+          ("myciel3", "petersen", "desargues")]
+    kw = dict(cap=1 << 12, block=BLOCK)
+    engine.reset_counters()
+    seq = [solver.solve(g, **kw) for g in gs]
+    seq_c = dict(engine.COUNTERS)
+    engine.reset_counters()
+    man = batch.solve_many(gs, **kw)
+    bat_c = dict(engine.COUNTERS)
+    for a, b in zip(seq, man):
+        assert (a.width, a.exact, a.expanded) == \
+            (b.width, b.exact, b.expanded)
+    assert bat_c["dispatches"] < seq_c["dispatches"]
+
+
 def test_keep_levels_forces_host_engine():
     """Reconstruction path still works when the fused engine is requested:
     keep_levels falls back to the host loop and returns snapshots."""
