@@ -29,6 +29,12 @@ def main() -> None:
     from . import batch_throughput
     batch_throughput.run(full=full)
 
+    print("# serve_throughput: solve service (continuous batching) vs "
+          "per-request solving", flush=True)
+    from . import serve_throughput
+    serve_throughput.run(full=full, quick=not full,
+                         lanes=8 if full else 4)
+
     print("# table2: work-size x memory sweep (paper Tables 2/3)",
           flush=True)
     from . import table2_worksize

@@ -1,0 +1,115 @@
+"""Solve-service throughput bench: per-request solving vs the
+continuous-batching lane scheduler (``repro.serve.twscheduler``).
+
+ISSUE 4's motivation quantified: a service answering one solve request
+at a time issues one fused dispatch per (request, block, k) and the
+device idles between them; the lane scheduler packs every in-flight
+request's current deepening rung into shared multi-lane dispatches and
+right-sizes the pooled frontier buffers with ``batch.plan_capacity``.
+This bench pushes a mixed Table-1 instance stream through
+
+  * ``sequential`` — ``[solver.solve(g) for g in stream]`` (per-request)
+  * ``service=L``  — ``TwScheduler(lanes=L)`` continuous batching
+
+and reports requests/sec, dispatch and host-sync counts, and the pooled
+frontier footprint, asserting full result parity (width/exactness/
+expanded — the default config carries no padding caveat) and the
+dispatch reduction.  On CPU absolute times measure XLA's CPU backend;
+the dispatch/sync reduction is the portable signal (wall-clock becomes
+meaningful on real TPU hardware, as with engine_sync).
+
+    python -m benchmarks.serve_throughput              # fast stream
+    python -m benchmarks.serve_throughput --quick      # CI-sized
+    python -m benchmarks.serve_throughput --full
+    python -m benchmarks.serve_throughput --lanes 16
+"""
+from __future__ import annotations
+
+from repro.core import batch, engine as engine_lib, solver
+from repro.core import bitset, frontier
+from repro.serve.twscheduler import TwScheduler
+
+from .common import Timer, emit, get_instance
+
+# the acceptance stream: 8 mixed Table-1 instances (small and mid blocks
+# interleaved so lanes genuinely overlap requests of different depths)
+STREAM = ["myciel3", "petersen", "queen5_5", "desargues",
+          "myciel4", "petersen", "myciel3", "queen5_5"]
+# CI-sized: small blocks only (plan_capacity stays well under DEFAULT_CAP,
+# so the footprint cut is visible) and a 4-lane pool — the vmapped lane
+# program compiles slowly on CPU (ROADMAP: TPU-vs-CPU compile note)
+STREAM_QUICK = ["myciel3", "petersen", "myciel3", "petersen",
+                "myciel3", "petersen", "myciel3", "petersen"]
+STREAM_FULL = STREAM + ["queen6_6", "mcgee", "dyck", "myciel4"]
+
+
+def run(full: bool = False, quick: bool = False, lanes: int = 8,
+        block: int = 1 << 10):
+    keys = STREAM_FULL if full else (STREAM_QUICK if quick else STREAM)
+    gs = [get_instance(k) for k in keys]
+
+    header = (f"{'mode':<14} {'time_s':>8} {'req_s':>8} {'dispatches':>10} "
+              f"{'host_syncs':>10} {'pool_MiB':>9}")
+    print(header, flush=True)
+    rows = {}
+
+    # per-request baseline: fixed worst-case cap, one solve per request
+    engine_lib.reset_counters()
+    with Timer() as t_seq:
+        seq = [solver.solve(g, cap=batch.DEFAULT_CAP, block=block)
+               for g in gs]
+    n_max = max(g.n for g in gs)
+    seq_pool = frontier.frontier_bytes(batch.DEFAULT_CAP,
+                                       bitset.n_words(n_max))
+    rows["sequential"] = (t_seq.seconds, dict(engine_lib.COUNTERS),
+                         seq_pool, seq)
+
+    # the service: continuous batching + plan_capacity-sized lane pool
+    engine_lib.reset_counters()
+    sched = TwScheduler(lanes=lanes, block=block)
+    rids = [sched.submit(g) for g in gs]
+    with Timer() as t_srv:
+        done = sched.run()
+    srv = [done[r] for r in rids]
+    srv_pool = sched.pool_bytes()
+    rows[f"service={lanes}"] = (t_srv.seconds, dict(engine_lib.COUNTERS),
+                                srv_pool, srv)
+
+    for mode, (secs, c, pool, results) in rows.items():
+        print(f"{mode:<14} {secs:>8.2f} "
+              f"{len(gs) / max(secs, 1e-9):>8.2f} {c['dispatches']:>10} "
+              f"{c['host_syncs']:>10} {pool / 2**20:>9.2f}", flush=True)
+        emit(f"serve_throughput/{mode}", secs,
+             f"req_s={len(gs) / max(secs, 1e-9):.2f};"
+             f"dispatches={c['dispatches']};host_syncs={c['host_syncs']};"
+             f"pool_bytes={pool}")
+
+    # parity: the service is pure scheduling — every request's result is
+    # bit-identical to its solo solve
+    for key, a, b in zip(keys, seq, srv):
+        assert (a.width, a.exact, a.expanded, a.lb, a.ub) == \
+            (b.width, b.exact, b.expanded, b.lb, b.ub), (key, a, b)
+
+    (ts, cs, _, _), (tm, cm, pool_m, _) = \
+        rows["sequential"], rows[f"service={lanes}"]
+    d_ratio = cs["dispatches"] / max(cm["dispatches"], 1)
+    assert cm["dispatches"] < cs["dispatches"], \
+        "service must batch rungs into fewer dispatches"
+    print(f"-> service: {d_ratio:.1f}x fewer dispatches, "
+          f"{ts / max(tm, 1e-9):.2f}x wall-clock, "
+          f"{len(gs) / max(tm, 1e-9):.2f} req/s", flush=True)
+    emit("serve_throughput/summary", tm,
+         f"dispatch_reduction={d_ratio:.2f}x;"
+         f"speedup={ts / max(tm, 1e-9):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    lanes = 8
+    if "--lanes" in sys.argv:
+        lanes = int(sys.argv[sys.argv.index("--lanes") + 1])
+    if "--quick" in sys.argv and "--lanes" not in sys.argv:
+        lanes = 4
+    run(full="--full" in sys.argv, quick="--quick" in sys.argv,
+        lanes=lanes)

@@ -107,6 +107,31 @@ def capability_table() -> Dict[str, Tuple[str, ...]]:
             for name, spec in sorted(_OPS.items())}
 
 
+def device_memory_budget(fraction: float = 0.5) -> Optional[int]:
+    """Best-effort device memory available for frontier pools, in bytes.
+
+    Reads the default device's allocator stats (populated on TPU/GPU;
+    absent on the CPU backend) and hands ``fraction`` of the free bytes to
+    the caller — the rest stays headroom for the adjacency/children
+    tensors and XLA scratch.  Returns ``None`` when the platform exposes
+    no stats, which callers (``batch.plan_capacity``) treat as
+    "state-space bound only".  DESIGN.md §10.
+    """
+    try:
+        import jax
+        dev = jax.devices()[0]
+        stats = getattr(dev, "memory_stats", lambda: None)()
+    except Exception:                                # noqa: BLE001
+        return None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    if not limit:
+        return None
+    free = max(0, int(limit) - int(stats.get("bytes_in_use", 0)))
+    return int(free * fraction)
+
+
 def validate(backend: str, *, mode: str = "sort",
              schedule: str = "doubling", use_mmw: bool = False,
              use_simplicial: bool = False,

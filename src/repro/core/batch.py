@@ -21,6 +21,12 @@ independent subproblems concurrently until each saturates the device):
     blocks to a common ``(n_max, W)`` and schedules lanes across the whole
     suite, replicating ``solver.solve``'s per-instance semantics exactly
     (same ``plan_block`` bounds, same skip rule, same accounting).
+  * ``InstanceState`` — the per-request unit those drivers (and the serve
+    scheduler, ``repro.serve.twscheduler``) advance rung by rung.
+  * ``plan_capacity`` — the memory model: right-sizes per-lane frontier
+    buffers from the block's state space, the chunk geometry and an
+    optional device-memory budget instead of the fixed worst-case ``cap``
+    (DESIGN.md §10).
 
 Padding semantics: a lane of true size ``n_g`` is embedded at the bottom
 of the common ``n_max`` index space; padding vertices are isolated in
@@ -40,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import List, Optional, Sequence
 
@@ -60,6 +67,55 @@ U32 = jnp.uint32
 # deepening ladder without blowing the frontier-buffer footprint
 # (B * cap * W words resident per dispatch)
 DEFAULT_MAX_LANES = 8
+
+# the historical fixed frontier capacity (solver.solve's old default).
+# ``cap=None`` everywhere now means "plan_capacity, clamped to this":
+# callers that want the old behaviour pass the constant explicitly.
+DEFAULT_CAP = 1 << 17
+
+
+def plan_capacity(n: int, w: Optional[int] = None, *, lanes: int = 1,
+                  block: int = 1 << 11, cap_max: int = DEFAULT_CAP,
+                  budget_bytes=None) -> int:
+    """Right-size the per-lane frontier capacity for an ``n``-vertex block.
+
+    Replaces the fixed ``cap`` default with the smallest power-of-two
+    buffer that provably never drops a state the fixed buffer would have
+    kept, so auto-sized runs stay bit-identical to fixed-``cap`` runs
+    (DESIGN.md §10).  The bound: a level holds at most ``C(n, l)``
+    distinct size-``l`` subsets, so with exact inter-level dedup the
+    append stream of one level is at most ``count * n <=
+    n * C(n, floor(n/2))`` rows — a buffer that large can never overflow,
+    and above ``cap_max`` the plan clamps to ``cap_max`` exactly like the
+    fixed default did.  Small preprocessed blocks are where this bites:
+    an ``n=10`` block plans 4096 rows instead of 2^17, cutting the
+    multi-lane pool footprint ~32x per lane.
+
+    The planned cap never goes below ``block`` (chunk geometry — and with
+    it Bloom-mode insert order — must match a fixed-``cap`` run of the
+    same ``block``), nor below 32 (the engine's smallest adaptive chunk).
+
+    ``budget_bytes`` optionally bounds the whole ``lanes``-wide pool:
+    ``lanes * cap * W * 4`` bytes is kept under the budget (pass
+    ``w = bitset.n_words(n_padded)`` for padded dispatches, and
+    ``budget_bytes="auto"`` to read ``backend.device_memory_budget()``).
+    A binding budget may reintroduce drops — runs stay correct, but carry
+    the usual overflow inexactness instead of the parity guarantee.
+    """
+    if n <= 1:
+        need = 1
+    else:
+        need = n * math.comb(n, n // 2) + 1
+    cap_hi = _pow2_floor(cap_max)      # an explicit cap_max is a ceiling:
+    cap = min(_pow2_at_least(need), cap_hi)   # round DOWN, never past it
+    cap = max(cap, 32, _pow2_at_least(min(block, cap_hi)))
+    if budget_bytes == "auto":
+        budget_bytes = backend_lib.device_memory_budget()
+    if budget_bytes is not None:
+        row_bytes = 4 * max(1, w if w is not None else bitset.n_words(n))
+        afford = int(budget_bytes) // (max(1, lanes) * row_bytes)
+        cap = max(32, min(cap, _pow2_floor(afford)))
+    return cap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +139,13 @@ class LaneResult:
 def _pow2_at_least(x: int) -> int:
     p = 1
     while p < x:
+        p *= 2
+    return p
+
+
+def _pow2_floor(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
         p *= 2
     return p
 
@@ -132,24 +195,31 @@ def _pack_lanes(lanes: Sequence[Lane], n_max: int, w: int):
 _TRIVIAL = Graph(1, np.zeros((1, 1), dtype=bool), "pad")
 
 
-def decide_lanes(lanes: Sequence[Lane], *, cap: int, block: int, mode: str,
+def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
+                 block: int, mode: str,
                  use_mmw: bool, m_bits: int, k_hashes: int, schedule: str,
                  backend: str = "jax", use_simplicial: bool = False,
                  n_pad: Optional[int] = None,
-                 lane_pad: Optional[int] = None) -> List[LaneResult]:
+                 lane_pad: Optional[int] = None,
+                 cap_max: int = DEFAULT_CAP,
+                 budget_bytes=None) -> List[LaneResult]:
     """Decide every lane in one dispatch; one host sync for all verdicts.
 
     ``n_pad`` pins the padded vertex count (callers batching many rounds
     pass a global n_max so every round hits the same compiled program);
     ``lane_pad`` rounds the lane axis up with trivial lanes for the same
     reason (compiled-program cache keyed on B).
+
+    ``cap=None`` sizes the shared per-lane buffer with ``plan_capacity``:
+    the largest lane's drop-free bound, clamped to ``cap_max`` (and to
+    ``budget_bytes`` over the whole pool when given) — results stay
+    bit-identical to a fixed-``cap`` dispatch per the plan's guarantee.
     """
     if not lanes:
         return []
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
                          m_bits=m_bits, lanes=len(lanes))
-    block = engine_lib.validate_geometry(cap, block)
     live = len(lanes)
     n_max = max(lane.g.n for lane in lanes)
     if n_pad is not None:
@@ -160,6 +230,11 @@ def decide_lanes(lanes: Sequence[Lane], *, cap: int, block: int, mode: str,
     if lane_pad is not None and lane_pad > live:
         lanes = list(lanes) + [Lane(_TRIVIAL, 0)] * (lane_pad - live)
     w = bitset.n_words(n_max)
+    if cap is None:
+        cap = max(plan_capacity(lane.g.n, w, lanes=len(lanes), block=block,
+                                cap_max=cap_max, budget_bytes=budget_bytes)
+                  for lane in lanes)
+    block = engine_lib.validate_geometry(cap, block)
 
     adj, allowed, ks, targets = _pack_lanes(lanes, n_max, w)
     fr = frontier_lib.lane_frontiers(len(lanes), cap, w)
@@ -177,7 +252,8 @@ def decide_lanes(lanes: Sequence[Lane], *, cap: int, block: int, mode: str,
 
 
 def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
-                 *, graphs: Optional[Sequence[Graph]] = None, cap: int,
+                 *, graphs: Optional[Sequence[Graph]] = None,
+                 cap: Optional[int] = None,
                  block: int, mode: str, use_mmw: bool, m_bits: int,
                  k_hashes: int, schedule: str, backend: str = "jax",
                  use_simplicial: bool = False) -> List[LaneResult]:
@@ -207,47 +283,74 @@ class _Run:
     state of ``solver.solve_block``)."""
     plan: object                  # solver.BlockPlan
     k: int
+    idx: int = 0                  # index into the preprocess block list
     expanded: int = 0
     any_inexact: bool = False
     per_k: dict = dataclasses.field(default_factory=dict)
 
 
-class _Instance:
+class InstanceState:
     """One input graph's scheduler state: the solve()-shaped fold over its
     preprocessed blocks (``solver.SuiteFold`` — the same accumulator
     ``solve`` uses, so the two drivers cannot drift), advanced block by
-    block as lanes report back."""
+    block as lane verdicts are fed back.
+
+    This is the per-request unit of both lane drivers: ``solve_many``
+    walks a whole suite of them, and the serve scheduler
+    (``repro.serve.twscheduler``) keeps one per admitted request, feeding
+    each slot's rung verdict after every shared dispatch.  ``result`` is
+    set (a ``solver.SolveResult``) once the instance is decided; until
+    then ``run`` names the block rung currently occupying a lane.
+
+    ``reconstruct=True`` additionally certifies the result with an
+    elimination order: when a block's winning rung is found, that single
+    rung is replayed once on the host engine (``keep_levels=True``) to
+    snapshot its levels — the replay is *not* counted into ``expanded``,
+    which keeps the accounting bit-identical to ``solver.solve`` (the
+    sequential path also expands the winning rung exactly once) — and the
+    block orders are stitched through the preprocess maps exactly like
+    ``solve(reconstruct=True)``.  ``recon_kw`` carries the decide kwargs
+    for that replay (``cap=None`` re-plans per block via
+    ``plan_capacity``, matching the sequential auto-sizing)."""
 
     def __init__(self, g: Graph, solver_lib, *, use_preprocess: bool,
-                 plan_kw: dict):
+                 plan_kw: dict, reconstruct: bool = False,
+                 recon_kw: Optional[dict] = None):
         self.g = g
         self.solver = solver_lib
         self.plan_kw = plan_kw
+        self.reconstruct = reconstruct
+        self.recon_kw = dict(recon_kw or {})
         self.t0 = time.time()
         self.result: Optional[object] = None     # solver.SolveResult
         self.run: Optional[_Run] = None
-        self.pre = use_preprocess
+        self.pre = None                          # preprocess.Preprocessed
+        self.use_pre = use_preprocess
         self.bi = 0
         if g.n == 0:
             self.parts: list = []
             self.fold = None
+            self.block_orders: list = []
             self.result = solver_lib.SolveResult(0, True, 0, 0, 0, 0.0,
                                                  [], {})
             return
         if use_preprocess:
-            pre = preprocess_lib.preprocess(g)
-            self.parts = [b.g for b in pre.blocks]
-            self.fold = solver_lib.SuiteFold.start(pre.lb)
+            self.pre = preprocess_lib.preprocess(g)
+            self.parts = [b.g for b in self.pre.blocks]
+            self.fold = solver_lib.SuiteFold.start(self.pre.lb)
         else:
             self.parts = [g]
             self.fold = None      # single block: adopt its result wholesale
+        self.block_orders = [None] * len(self.parts)
         self._advance()
 
     def max_n(self) -> int:
         return max([p.n for p in self.parts], default=1)
 
-    def _fold(self, bres, name: str):
-        if not self.pre:
+    def _fold(self, bres, name: str, idx: int):
+        if self.reconstruct:
+            self.block_orders[idx] = bres.order
+        if not self.use_pre:
             self.result = dataclasses.replace(
                 bres, time_sec=time.time() - self.t0)
             return
@@ -257,45 +360,94 @@ class _Instance:
         """Start the next runnable block, or finish the instance."""
         while self.run is None and self.result is None:
             if self.bi >= len(self.parts):
-                if self.pre:
-                    self.result = self.fold.result(time.time() - self.t0)
+                if self.use_pre:
+                    order = None
+                    if self.reconstruct:
+                        order = self.solver.stitch_and_verify(
+                            self.g, self.pre, self.block_orders,
+                            self.fold.width)
+                    self.result = self.fold.result(
+                        time.time() - self.t0, order)
                 return
             part = self.parts[self.bi]
+            idx = self.bi
             self.bi += 1
-            if self.pre and self.fold.skip(part):
+            if self.use_pre and self.fold.skip(part):
                 continue
             plan = self.solver.plan_block(part, **self.plan_kw)
             if plan.result is not None:
-                self._fold(plan.result, part.name)
+                self._fold(plan.result, part.name, idx)
                 continue
-            self.run = _Run(plan, k=plan.k0)
+            self.run = _Run(plan, k=plan.k0, idx=idx)
+
+    def _certify(self, plan, k: int) -> Optional[list]:
+        """Replay the winning rung on the host engine for level snapshots
+        and backtrack an elimination order (uncounted — see class doc)."""
+        kw = dict(self.recon_kw)
+        if kw.get("cap") is None:
+            kw["cap"] = plan_capacity(plan.g.n, block=kw.get("block", 32),
+                                      cap_max=kw.pop("cap_max", DEFAULT_CAP))
+        else:
+            kw.pop("cap_max", None)
+        res = self.solver.decide(plan.graph_at(k), k, plan.clique,
+                                 keep_levels=True, engine="host", **kw)
+        return self.solver.reconstruct_order(plan.graph_at(k), k,
+                                             plan.clique, res.levels)
 
     def finish_block(self, k_found: Optional[int]):
         run = self.run
         plan = run.plan
         if k_found is not None:
+            order = (self._certify(plan, k_found)
+                     if self.reconstruct else None)
             bres = self.solver.SolveResult(
                 k_found, plan.exact_at(k_found, run.any_inexact), plan.lb,
-                plan.ub, run.expanded, 0.0, None, run.per_k)
+                plan.ub, run.expanded, 0.0, order, run.per_k)
         else:
             bres = self.solver.SolveResult(
                 plan.ub, not run.any_inexact, plan.lb, plan.ub,
                 run.expanded, 0.0, plan.ub_order, run.per_k)
         self.run = None
-        self._fold(bres, plan.g.name)
+        self._fold(bres, plan.g.name, run.idx)
         self._advance()
 
+    def feed(self, k: int, res: LaneResult) -> bool:
+        """Consume one rung verdict with sequential-ladder accounting.
 
-def solve_many(graphs: Sequence[Graph], *, cap: int = 1 << 17,
+        Returns ``False`` once the block finished on this verdict (a
+        speculative caller must discard its remaining rungs *uncounted* —
+        the sequential ladder never ran them), ``True`` while the ladder
+        continues.  This is the single accounting path shared by
+        ``solve_many`` and the serve scheduler, so ``expanded``/``per_k``
+        cannot drift from ``solver.solve_block``'s."""
+        run = self.run
+        run.expanded += res.expanded
+        run.per_k[k] = {"feasible": res.feasible, "inexact": res.inexact,
+                        "expanded": res.expanded}
+        if res.feasible:
+            self.finish_block(k)
+            return False
+        if res.inexact:
+            run.any_inexact = True
+        run.k = k + 1
+        if run.k >= run.plan.ub:
+            self.finish_block(None)
+            return False
+        return True
+
+
+def solve_many(graphs: Sequence[Graph], *, cap: Optional[int] = None,
                block: int = 1 << 11, mode: str = "sort",
                use_mmw: bool = False, m_bits: int = 1 << 24,
                k_hashes: int = bloom.DEFAULT_K,
                schedule: Optional[str] = None, use_clique: bool = True,
                use_paths: bool = True, use_preprocess: bool = True,
+               reconstruct: bool = False,
                start_k: Optional[int] = None, verbose: bool = False,
                backend: str = "jax", use_simplicial: bool = False,
                lanes: int = DEFAULT_MAX_LANES,
-               speculate: int = 1) -> List[object]:
+               speculate: int = 1,
+               budget_bytes=None) -> List[object]:
     """Solve a whole suite with cross-instance lane batching.
 
     Returns one ``solver.SolveResult`` per input, in input order, with the
@@ -314,9 +466,16 @@ def solve_many(graphs: Sequence[Graph], *, cap: int = 1 << 17,
     ``lanes`` lanes.  ``speculate > 1`` additionally lets each instance
     occupy that many consecutive-k lanes per round.
 
-    Reconstruction is not offered here (it needs per-level host snapshots,
-    which are single-lane by nature) — use ``solver.solve(reconstruct=
-    True)`` per instance for orders.
+    ``cap=None`` (default) sizes each dispatch's shared per-lane buffer
+    with ``plan_capacity`` (drop-free bound of the largest lane, clamped
+    to ``DEFAULT_CAP`` / ``budget_bytes``) instead of one fixed
+    worst-case buffer — small preprocessed blocks stop paying for 2^17
+    rows they can never fill, and the parity guarantees above still hold.
+
+    ``reconstruct=True`` certifies every result with a stitched
+    elimination order exactly like ``solver.solve(reconstruct=True)``:
+    each block's winning rung is replayed once on the host engine for
+    level snapshots (uncounted, so ``expanded`` parity is preserved).
     """
     from . import solver as solver_lib   # lazy: solver imports this module
 
@@ -329,13 +488,29 @@ def solve_many(graphs: Sequence[Graph], *, cap: int = 1 << 17,
                          m_bits=m_bits, lanes=lanes)
     decide_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
                      m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
-                     backend=backend, use_simplicial=use_simplicial)
+                     backend=backend, use_simplicial=use_simplicial,
+                     budget_bytes=budget_bytes)
     plan_kw = dict(use_clique=use_clique, use_paths=use_paths,
                    start_k=start_k)
+    recon_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+                    m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+                    backend=backend, use_simplicial=use_simplicial)
 
-    insts = [_Instance(g, solver_lib, use_preprocess=use_preprocess,
-                       plan_kw=plan_kw) for g in graphs]
+    insts = [InstanceState(g, solver_lib, use_preprocess=use_preprocess,
+                           plan_kw=plan_kw, reconstruct=reconstruct,
+                           recon_kw=recon_kw) for g in graphs]
     n_pad = max([i.max_n() for i in insts], default=1)
+    if cap is None:
+        # resolve ONE plan for the whole suite (largest block wins)
+        # instead of per dispatch group: per-group caps would mint a new
+        # jit signature every time group membership changes, and the
+        # vmapped lane program is expensive to compile.  Still <= the old
+        # fixed default, and all-small suites keep the full footprint cut.
+        w = bitset.n_words(n_pad)
+        decide_kw["cap"] = max(plan_capacity(
+            p.n, w, lanes=lanes, block=block, budget_bytes=budget_bytes)
+            for i in insts for p in i.parts) if any(i.parts for i in insts) \
+            else 32
 
     rnd = 0
     while True:
@@ -363,33 +538,18 @@ def solve_many(graphs: Sequence[Graph], *, cap: int = 1 << 17,
                 **decide_kw))
         pos = 0
         for inst, ks in sched:
-            run = inst.run
+            name = inst.run.plan.g.name
             rungs = results[pos:pos + len(ks)]
             pos += len(ks)
-            k_found = None
             for kk, res in zip(ks, rungs):
-                # sequential-ladder accounting: rungs above the first
-                # feasible one were never run sequentially — discard them
-                # uncounted
-                run.expanded += res.expanded
-                run.per_k[kk] = {"feasible": res.feasible,
-                                 "inexact": res.inexact,
-                                 "expanded": res.expanded}
                 if verbose:
-                    print(f"  [{run.plan.g.name}] k={kk} "
+                    print(f"  [{name}] k={kk} "
                           f"feasible={res.feasible} "
                           f"expanded={res.expanded} "
                           f"inexact={res.inexact}", flush=True)
-                if res.feasible:
-                    k_found = kk
+                if not inst.feed(kk, res):
+                    # block finished on this rung: rungs above it were
+                    # never run sequentially — discard them uncounted
                     break
-                if res.inexact:
-                    run.any_inexact = True
-            if k_found is not None:
-                inst.finish_block(k_found)
-            else:
-                run.k = ks[-1] + 1
-                if run.k >= run.plan.ub:
-                    inst.finish_block(None)
         rnd += 1
     return [inst.result for inst in insts]

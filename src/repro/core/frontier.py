@@ -70,6 +70,16 @@ def lane_frontiers(lanes: int, cap: int, w: int) -> Frontier:
                     dropped=jnp.zeros((lanes,), dtype=jnp.int32))
 
 
+def frontier_bytes(cap: int, w: int, lanes: int = 1) -> int:
+    """Device bytes of a ``(lanes, cap, W)`` uint32 frontier pool.
+
+    This is the *resident* pool only: one level step transiently doubles
+    it (the append buffer ``out`` in ``engine.expand_chunk``) and adds the
+    ``(block, n, W)`` children tile.  ``batch.plan_capacity`` sizes caps
+    against this number (DESIGN.md §10)."""
+    return 4 * max(1, lanes) * max(1, cap) * max(1, w)
+
+
 def lane_to_host(f: Frontier, lane: int) -> np.ndarray:
     """Materialise one lane's live rows from a batched frontier."""
     c = int(f.count[lane])

@@ -341,13 +341,19 @@ def plan_block(g: Graph, *, use_clique: bool, use_paths: bool,
     return BlockPlan(g, clique, lb, ub, ub_order, paths, k0, forced)
 
 
-def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
+def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
+                use_mmw: bool,
                 m_bits: int, k_hashes: int, schedule: str, use_clique: bool,
                 use_paths: bool, reconstruct: bool, start_k: Optional[int],
                 verbose: bool, backend: str = "jax",
                 use_simplicial: bool = False,
                 engine: str = "fused", lanes: int = 1) -> SolveResult:
     """Iterative deepening on one (biconnected) block.
+
+    ``cap=None`` right-sizes the frontier buffer for this block with
+    ``batch.plan_capacity`` (drop-free state bound, clamped to
+    ``batch.DEFAULT_CAP``) — bit-identical results, far smaller buffers
+    for small blocks.
 
     ``lanes > 1`` enables speculative deepening: ``decide`` for
     ``k, k+1, ..., k+lanes-1`` runs as one multi-lane dispatch
@@ -363,6 +369,9 @@ def solve_block(g: Graph, *, cap: int, block: int, mode: str, use_mmw: bool,
                       start_k=start_k)
     if plan.result is not None:
         return dataclasses.replace(plan.result, time_sec=time.time() - t0)
+    if cap is None:
+        from . import batch as batch_lib
+        cap = batch_lib.plan_capacity(g.n, block=block)
 
     spec = max(1, int(lanes))
     if spec > 1 and (reconstruct or engine != "fused"):
@@ -448,7 +457,7 @@ class SuiteFold:
                            elapsed, order, self.per_k)
 
 
-def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
+def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
           mode: str = "sort", use_mmw: bool = False, m_bits: int = 1 << 24,
           k_hashes: int = bloom.DEFAULT_K, schedule: Optional[str] = None,
           use_clique: bool = True, use_paths: bool = True,
@@ -459,11 +468,19 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
           impl: Optional[str] = None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
+    ``cap`` bounds the frontier buffer (rows per level).  The default
+    ``cap=None`` auto-sizes it per preprocessed block with
+    ``batch.plan_capacity``: the block's drop-free state bound, clamped
+    to ``batch.DEFAULT_CAP`` (= the old fixed ``1 << 17`` default) —
+    results are bit-identical to the fixed buffer, small blocks just stop
+    paying its footprint.  Pass an explicit power of two to pin it.
     ``engine`` selects the wavefront driver: "fused" (device-resident
     ``lax.while_loop``, one dispatch per k) or "host" (per-level host loop;
     forced automatically where reconstruction needs level snapshots).
     ``backend`` selects the op implementations through the registry
-    (``repro.core.backend``): "jax" reference or fused "pallas" kernels.
+    (``repro.core.backend``; the ad-hoc ``impl=`` string it replaced
+    survives only as a deprecated alias of this knob): "jax" reference or
+    fused "pallas" kernels.
     ``schedule=None`` resolves to the backend's default closure fixpoint
     ("while" for jax, the static "doubling" baked into the pallas kernels).
     ``lanes > 1`` turns the deepening ladder speculative: each dispatch
@@ -473,8 +490,8 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
     preprocessing on, each block is reconstructed with the host engine and
     the block-local orders are stitched back through the preprocess vertex
     maps (``preprocess.stitch_block_orders``).  To batch *across*
-    instances, see ``batch.solve_many``.
-    ``impl`` is the deprecated spelling of ``backend``."""
+    instances, see ``batch.solve_many``; to serve a concurrent request
+    stream, see ``repro.serve.twscheduler``."""
     t0 = time.time()
     if impl is not None:
         warnings.warn("solve(impl=...) is deprecated; use backend=...",
@@ -507,13 +524,24 @@ def solve(g: Graph, *, cap: int = 1 << 17, block: int = 1 << 11,
         block_orders[i] = res.order
     order = None
     if reconstruct:
-        order = preprocess_lib.stitch_block_orders(pre, block_orders)
-        replay = order_width(g, order)
-        if replay > fold.width:
-            warnings.warn(
-                f"stitched elimination order replays at width {replay} > "
-                f"computed width {fold.width}; dropping the order (please "
-                "report — this indicates a preprocess/stitch bug)",
-                stacklevel=2)
-            order = None
+        order = stitch_and_verify(g, pre, block_orders, fold.width)
     return fold.result(time.time() - t0, order)
+
+
+def stitch_and_verify(g: Graph, pre, block_orders: list,
+                      width: int) -> Optional[list]:
+    """Stitch per-block elimination orders into a global certificate and
+    replay-check it (shared by ``solve`` and the lane drivers in
+    ``core.batch`` / ``repro.serve.twscheduler`` so their reconstruction
+    semantics cannot drift).  Returns ``None`` (with a warning) if the
+    stitched order replays above the computed width."""
+    order = preprocess_lib.stitch_block_orders(pre, block_orders)
+    replay = order_width(g, order)
+    if replay > width:
+        warnings.warn(
+            f"stitched elimination order replays at width {replay} > "
+            f"computed width {width}; dropping the order (please "
+            "report — this indicates a preprocess/stitch bug)",
+            stacklevel=2)
+        return None
+    return order

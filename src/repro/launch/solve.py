@@ -14,8 +14,14 @@ results, fewer dispatches.
 
 ``--backend`` selects the op implementations through the registry
 (``repro.core.backend``): "jax" reference or the fused Pallas wavefront
-kernel ("pallas"; interpret mode off-TPU).  Unsupported combinations are
-rejected here with a capability error before anything is traced.
+kernel ("pallas"; interpret mode off-TPU).  The pre-registry ``impl=``
+spelling survives only as a hidden deprecated alias.  Unsupported
+combinations are rejected here with a capability error before anything
+is traced.
+
+``--cap`` defaults to auto-sizing (``repro.core.batch.plan_capacity``).
+To serve a *stream* of solve requests through one lane pool instead of
+solving one instance, see ``python -m repro.launch.twserve``.
 """
 from __future__ import annotations
 
@@ -29,7 +35,15 @@ def main(argv=None):
     ap.add_argument("--graph", default="",
                     help="generator name (see core.graph.REGISTRY)")
     ap.add_argument("--dimacs", default="", help="DIMACS/.gr file")
-    ap.add_argument("--cap", type=int, default=1 << 18)
+    ap.add_argument("--cap", type=int, default=None,
+                    help="frontier rows per level (power of two). Default: "
+                         "auto — repro.core.batch.plan_capacity right-sizes "
+                         "the buffer per preprocessed block (drop-free "
+                         "state bound, clamped to 2^17) instead of the old "
+                         "fixed 2^18; results are bit-identical, small "
+                         "blocks just stop paying the worst-case footprint. "
+                         "--distributed still defaults to 2^18 (sharded "
+                         "caps are split across devices, not planned)")
     ap.add_argument("--block", type=int, default=1 << 10)
     ap.add_argument("--mode", default="sort", choices=["sort", "bloom"])
     ap.add_argument("--engine", default="fused", choices=["fused", "host"],
@@ -98,8 +112,9 @@ def main(argv=None):
               "ignoring it under --distributed", file=sys.stderr)
     if args.distributed:
         mesh = dist_lib.make_solver_mesh()
+        cap = args.cap if args.cap is not None else 1 << 18
         res = dist_lib.solve_distributed(
-            g, mesh, cap_local=args.cap // max(1, mesh.devices.size),
+            g, mesh, cap_local=cap // max(1, mesh.devices.size),
             block=args.block, use_mmw=args.mmw,
             use_simplicial=args.simplicial,
             schedule=args.schedule, backend=args.backend,

@@ -77,6 +77,14 @@ def main(argv=None):
             if marker:
                 with open(marker, "w") as f:
                     f.write(str(step))
+            if mgr is not None:
+                # the injection simulates a crash *after* the last
+                # checkpoint became durable (what the restart test
+                # verifies); without this join the daemon writer thread
+                # races the exit and the restart nondeterministically
+                # finds no checkpoint (a real mid-write crash is still
+                # safe — .tmp dirs are ignored — just not resumable)
+                mgr.wait()
             print(f"[train] injected crash at step {step}", flush=True)
             raise SystemExit(17)
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}

@@ -1,9 +1,11 @@
-"""Slot-based continuous batching scheduler.
+"""Slot-based continuous batching scheduler (LM decode).
 
-A fixed pool of B decode slots.  Admission is **token-at-a-time**: a newly
-admitted request streams its prompt through the shared batched decode step
-(one token per tick) until the prompt is exhausted, then flips to
-generation.  Finished sequences release their slot immediately.
+A fixed pool of B decode slots (``repro.serve.slots.SlotPool`` — the
+admission core shared with the treewidth solve scheduler).  Admission is
+**token-at-a-time**: a newly admitted request streams its prompt through
+the shared batched decode step (one token per tick) until the prompt is
+exhausted, then flips to generation.  Finished sequences release their
+slot immediately.
 
 Why token-at-a-time instead of a separate batched prefill:
   * one jit signature for the whole serving loop (decode only);
@@ -17,11 +19,12 @@ Why token-at-a-time instead of a separate batched prefill:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 import jax.numpy as jnp
+
+from .slots import SlotPool
 
 
 @dataclasses.dataclass
@@ -35,7 +38,7 @@ class Request:
 
 @dataclasses.dataclass
 class _Slot:
-    request: Optional[Request] = None
+    request: Request
     pos: int = 0                 # next cache position to write
     fed: int = 0                 # prompt tokens already fed
     generated: int = 0
@@ -45,36 +48,33 @@ class Scheduler:
     def __init__(self, engine, params):
         self.engine = engine
         self.params = params
-        self.queue: deque = deque()
-        self.slots: List[_Slot] = [_Slot() for _ in range(engine.batch)]
+        self.pool = SlotPool(engine.batch)
         self.cache = engine.new_cache()
         self.done: dict = {}
         self._feed = np.zeros((engine.batch, 1), np.int32)
 
     def submit(self, req: Request):
         req.output = []
-        self.queue.append(req)
+        self.pool.submit(req)
 
     def _admit(self):
-        for i, s in enumerate(self.slots):
-            if s.request is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = _Slot(request=req, pos=0, fed=0, generated=0)
-                self._feed[i, 0] = req.prompt[0]
+        for i, s in self.pool.admit(lambda req: _Slot(request=req)):
+            self._feed[i, 0] = s.request.prompt[0]
 
     def step(self) -> bool:
         """One engine tick: batched decode over all slots."""
         self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.request is not None]
+        active = self.pool.active()
         if not active:
             return False
-        pos = np.asarray([s.pos for s in self.slots], np.int32)
+        pos = np.zeros(len(self.pool), np.int32)
+        for i, s in active:
+            pos[i] = s.pos
         logits, self.cache = self.engine.decode(
             self.params, jnp.asarray(self._feed), self.cache,
             jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        for i in active:
-            s = self.slots[i]
+        for i, s in active:
             s.pos += 1
             if s.fed < len(s.request.prompt) - 1:
                 # still streaming the prompt
@@ -90,15 +90,14 @@ class Scheduler:
                          and tok == s.request.eos_id))
             if finished:
                 self.done[s.request.rid] = s.request
-                self.slots[i] = _Slot()
+                self.pool.release(i)
             else:
                 self._feed[i, 0] = tok
         return True
 
     def run(self, max_ticks: int = 100_000):
         ticks = 0
-        while (self.queue or any(s.request for s in self.slots)) \
-                and ticks < max_ticks:
+        while self.pool.busy and ticks < max_ticks:
             if not self.step():
                 break
             ticks += 1

@@ -1,0 +1,71 @@
+"""Fixed slot pool + FIFO admission: the shared continuous-batching core.
+
+Both serving schedulers are the same machine — a fixed pool of B slots,
+each holding the in-flight state of one admitted request, advanced by a
+shared batched device step, with finished slots recycled to the queue
+immediately:
+
+  * ``repro.serve.scheduler``  — LM decode: a slot is a sequence, the
+    shared step is one batched decode tick;
+  * ``repro.serve.twscheduler`` — treewidth solves: a slot is a solve
+    request's current deepening rung, the shared step is one multi-lane
+    ``batch.decide_lanes`` dispatch.
+
+This module is the slot/admission mechanics they share; everything
+workload-specific (what a slot holds, what one step does, when a slot is
+finished) stays in the schedulers.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, List, Optional, Tuple
+
+
+class SlotPool:
+    """``n_slots`` recyclable slots fed from a FIFO queue.
+
+    A slot is either ``None`` (free) or an arbitrary caller state object.
+    ``admit`` pops queued items into free slots through a caller ``start``
+    callback, which may return ``None`` to signal "finished at admission"
+    (e.g. a trivial instance) — the slot then immediately tries the next
+    queued item, so trivial requests never waste a batched step.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot (got {n_slots})")
+        self.slots: List[Optional[object]] = [None] * n_slots
+        self.queue: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def submit(self, item) -> None:
+        self.queue.append(item)
+
+    def admit(self, start: Callable[[object], Optional[object]]
+              ) -> List[Tuple[int, object]]:
+        """Fill free slots from the queue; returns [(slot index, state)]."""
+        admitted = []
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                continue
+            while self.queue:
+                state = start(self.queue.popleft())
+                if state is not None:
+                    self.slots[i] = state
+                    admitted.append((i, state))
+                    break
+        return admitted
+
+    def release(self, i: int) -> None:
+        self.slots[i] = None
+
+    def active(self) -> List[Tuple[int, object]]:
+        """Occupied slots in slot order (the batched-step iteration set)."""
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def busy(self) -> bool:
+        """Anything queued or in flight?"""
+        return bool(self.queue) or any(s is not None for s in self.slots)

@@ -1,0 +1,217 @@
+"""Treewidth solve service: continuous batching of solve requests.
+
+The paper keeps the GPU busy by batching many independent wavefront
+expansions per dispatch; this module applies the same principle one level
+up, at the *request* level.  A fixed pool of L lanes
+(``repro.serve.slots.SlotPool`` — the admission core shared with the LM
+scheduler) runs continuous batching over concurrent ``solve`` requests:
+
+  * each admitted request holds one lane with its current iterative-
+    deepening rung — the ``(adj, allowed, k)`` of its current
+    preprocessed block at its current k;
+  * every scheduler step packs all occupied lanes into ONE shared
+    multi-lane dispatch (``batch.decide_lanes``, DESIGN.md §8): the
+    vmapped ``decide_loop`` runs every rung concurrently, a finished
+    lane's masked early-exit freezing its carry while the others step;
+  * when the dispatch returns, each lane's verdict is fed to its
+    request's ``batch.InstanceState`` (the same per-rung accounting
+    ``solve``/``solve_many`` use, so results are bit-identical to
+    sequential ``solver.solve`` per request) and the slot is immediately
+    recycled — to the request's next rung, its next block, or the next
+    queued request.
+
+Fairness is structural: admission is FIFO, and every in-flight request
+advances exactly one rung per dispatch (round-robin by construction —
+a hard instance cannot starve the cheap ones behind it, it just keeps
+its one lane while they stream through the remaining L-1).
+
+Memory: the per-lane frontier buffers are sized by
+``batch.plan_capacity`` (``cap=None``), so a pool full of small blocks
+does not pay L x 2^17 rows; ``budget_bytes`` bounds the whole pool.
+Compiled-program churn is bounded by ratcheting the padded vertex count
+(word-aligned), the planned cap, and the lane axis (always padded to the
+full pool with trivial lanes) — a steady-state service hits one compiled
+program.  See DESIGN.md §10 for the architecture and the parity caveats
+(bloom-mode requests padded into a larger word count than their solo run
+draw a different Monte-Carlo false-positive set; MMW sees padding rows).
+
+    sched = TwScheduler(lanes=8)
+    sched.submit(graph.queen(5))
+    sched.submit(graph.myciel(4), reconstruct=True)
+    results = sched.run()          # {rid: solver.SolveResult}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import backend as backend_lib
+from repro.core import batch, bitset, bloom
+from repro.core import frontier as frontier_lib
+from repro.core import solver as solver_lib
+from repro.core.graph import Graph
+
+from .slots import SlotPool
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One user query: compute tw(g), optionally with a certified order."""
+    rid: int
+    g: Graph
+    reconstruct: bool = False
+    start_k: Optional[int] = None
+
+
+def _round32(n: int) -> int:
+    """Word-align the padded vertex count: keeps W stable (bloom parity
+    for sub-word instances) and bounds jit signatures."""
+    return max(32, -(-n // 32) * 32)
+
+
+class TwScheduler:
+    """Continuous-batching scheduler over treewidth solve requests.
+
+    Solver knobs mirror ``solver.solve`` and apply to every request in
+    the pool (one shared dispatch = one static config).  ``cap=None``
+    (default) auto-sizes each dispatch's per-lane frontier buffer via
+    ``batch.plan_capacity``; ``budget_bytes`` (int or ``"auto"``) bounds
+    the whole L-lane pool.  Results per request are bit-identical to
+    ``solver.solve(g, ...)`` with the same knobs (see DESIGN.md §10 for
+    the two padded-lane caveats inherited from §8).
+    """
+
+    def __init__(self, *, lanes: int = batch.DEFAULT_MAX_LANES,
+                 cap: Optional[int] = None, block: int = 1 << 11,
+                 mode: str = "sort", use_mmw: bool = False,
+                 m_bits: int = 1 << 24, k_hashes: int = bloom.DEFAULT_K,
+                 schedule: Optional[str] = None, backend: str = "jax",
+                 use_simplicial: bool = False, use_clique: bool = True,
+                 use_paths: bool = True, use_preprocess: bool = True,
+                 cap_max: int = batch.DEFAULT_CAP, budget_bytes=None,
+                 verbose: bool = False):
+        if schedule is None:
+            schedule = "doubling" if backend == "pallas" else "while"
+        backend_lib.validate(backend, mode=mode, schedule=schedule,
+                             use_mmw=use_mmw, use_simplicial=use_simplicial,
+                             m_bits=m_bits, lanes=int(lanes))
+        if budget_bytes == "auto":
+            budget_bytes = backend_lib.device_memory_budget()
+        self.pool = SlotPool(int(lanes))
+        self.cap = cap
+        self.cap_max = cap_max
+        self.budget_bytes = budget_bytes
+        self.block = block
+        self.verbose = verbose
+        self.decide_kw = dict(block=block, mode=mode, use_mmw=use_mmw,
+                              m_bits=m_bits, k_hashes=k_hashes,
+                              schedule=schedule, backend=backend,
+                              use_simplicial=use_simplicial)
+        self.plan_kw = dict(use_clique=use_clique, use_paths=use_paths)
+        self.use_preprocess = use_preprocess
+        self.recon_kw = dict(cap=cap, cap_max=cap_max, **self.decide_kw)
+        self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
+        self.rounds = 0                          # shared dispatches issued
+        self._next_rid = 0
+        # monotone ratchets: padded n (word-aligned), planned cap — each
+        # bump compiles one new program, steady state reuses it
+        self._n_pad = 32
+        self._cap_pad = 0
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, g: Graph, *, reconstruct: bool = False,
+               start_k: Optional[int] = None,
+               rid: Optional[int] = None) -> int:
+        """Queue one solve request; returns its request id."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.pool.submit(SolveRequest(rid, g, reconstruct, start_k))
+        return rid
+
+    def _start(self, req: SolveRequest):
+        """Admission: build the request's deepening state.  Returns None
+        when the instance decides at admission (trivial graph, lb == ub)
+        — the slot is then recycled to the next queued request at once."""
+        inst = batch.InstanceState(
+            req.g, solver_lib, use_preprocess=self.use_preprocess,
+            plan_kw=dict(start_k=req.start_k, **self.plan_kw),
+            reconstruct=req.reconstruct, recon_kw=self.recon_kw)
+        if inst.result is not None:
+            self._finish(req, inst)
+            return None
+        return (req, inst)
+
+    def _finish(self, req: SolveRequest, inst: batch.InstanceState):
+        self.done[req.rid] = inst.result
+        if self.verbose:
+            r = inst.result
+            print(f"[twserve] req {req.rid} ({req.g.name}): width={r.width}"
+                  f" exact={r.exact} expanded={r.expanded}", flush=True)
+
+    # ----------------------------------------------------------- the engine
+
+    def step(self) -> bool:
+        """One shared dispatch: admit, pack every occupied lane's current
+        rung, decide them all at once, recycle finished slots."""
+        self.pool.admit(self._start)
+        active = self.pool.active()
+        if not active:
+            return False
+
+        lanes, metas = [], []
+        for i, (req, inst) in active:
+            run = inst.run
+            lanes.append(batch.Lane(run.plan.graph_at(run.k), run.k,
+                                    tuple(run.plan.clique)))
+            metas.append((i, req, inst, run.k))
+        self._n_pad = max(self._n_pad,
+                          _round32(max(lane.g.n for lane in lanes)))
+        cap = self.cap
+        if cap is None:
+            w = bitset.n_words(self._n_pad)
+            cap = max(batch.plan_capacity(
+                lane.g.n, w, lanes=len(self.pool), block=self.block,
+                cap_max=self.cap_max, budget_bytes=self.budget_bytes)
+                for lane in lanes)
+            cap = max(self._cap_pad, cap)
+            if self.budget_bytes is not None:
+                # the budget outranks the compile-stability ratchet: a cap
+                # ratcheted under a smaller word count must shrink when a
+                # wider instance grows W, or the pool would exceed the
+                # bytes the knob promises to bound
+                afford = int(self.budget_bytes) // \
+                    (len(self.pool) * 4 * max(1, w))
+                cap = min(cap, max(32, batch._pow2_floor(afford)))
+            self._cap_pad = cap
+
+        results = batch.decide_lanes(
+            lanes, cap=cap, n_pad=self._n_pad, lane_pad=len(self.pool),
+            **self.decide_kw)
+        self.rounds += 1
+
+        for (i, req, inst, k), res in zip(metas, results):
+            inst.feed(k, res)          # may finish block(s) / the instance
+            if inst.result is not None:
+                self._finish(req, inst)
+                self.pool.release(i)
+        return True
+
+    def run(self, max_rounds: int = 1_000_000) -> Dict[int, object]:
+        """Drain the queue; returns {rid: solver.SolveResult}."""
+        rounds = 0
+        while self.pool.busy and rounds < max_rounds:
+            if not self.step():
+                break
+            rounds += 1
+        return self.done
+
+    def pool_bytes(self) -> int:
+        """Resident frontier-pool footprint of the largest dispatch issued
+        so far (lanes x cap x W uint32 rows — ``frontier.frontier_bytes``)."""
+        cap = self.cap if self.cap is not None else \
+            (self._cap_pad or batch.plan_capacity(
+                self._n_pad, block=self.block, cap_max=self.cap_max))
+        return frontier_lib.frontier_bytes(cap, bitset.n_words(self._n_pad),
+                                           lanes=len(self.pool))
