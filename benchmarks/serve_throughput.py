@@ -1,22 +1,31 @@
 """Solve-service throughput bench: per-request solving vs the
-continuous-batching lane scheduler (``repro.serve.twscheduler``).
+continuous-batching lane scheduler, blocking vs async overlap
+(``repro.serve.twscheduler``).
 
-ISSUE 4's motivation quantified: a service answering one solve request
-at a time issues one fused dispatch per (request, block, k) and the
-device idles between them; the lane scheduler packs every in-flight
-request's current deepening rung into shared multi-lane dispatches and
-right-sizes the pooled frontier buffers with ``batch.plan_capacity``.
-This bench pushes a mixed Table-1 instance stream through
+ISSUE 4's motivation quantified, extended with ISSUE 5's overlap
+pipeline: a service answering one solve request at a time issues one
+fused dispatch per (request, block, k) and the device idles between
+them; the lane scheduler packs every in-flight request's current
+deepening rung into shared multi-lane dispatches and right-sizes the
+pooled frontier buffers with ``batch.plan_capacity``; the async
+scheduler additionally admits requests arriving *mid-flight* into the
+very next dispatch instead of waiting for an idle pool.  This bench
+pushes a mixed Table-1 instance stream through
 
   * ``sequential`` — ``[solver.solve(g) for g in stream]`` (per-request)
-  * ``service=L``  — ``TwScheduler(lanes=L)`` continuous batching
+  * ``service=L``  — ``TwScheduler(lanes=L)``, blocking drain
+  * ``async=L``    — the same stream with its second half arriving while
+    the first dispatch is in flight, vs the blocking two-phase pattern
+    (drain to idle, then serve the burst)
 
-and reports requests/sec, dispatch and host-sync counts, and the pooled
+and reports requests/sec, dispatch/host-sync/round counts and the pooled
 frontier footprint, asserting full result parity (width/exactness/
-expanded — the default config carries no padding caveat) and the
-dispatch reduction.  On CPU absolute times measure XLA's CPU backend;
-the dispatch/sync reduction is the portable signal (wall-clock becomes
-meaningful on real TPU hardware, as with engine_sync).
+expanded — the default config carries no padding caveat) including the
+per_k reassembled from the streamed ``rung_decided`` events, plus the
+dispatch reduction and the mid-flight-admission round evidence.  On CPU
+absolute times measure XLA's CPU backend; the dispatch/round reduction
+is the portable signal (wall-clock becomes meaningful on real TPU
+hardware, as with engine_sync).
 
     python -m benchmarks.serve_throughput              # fast stream
     python -m benchmarks.serve_throughput --quick      # CI-sized
@@ -101,7 +110,88 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
     emit("serve_throughput/summary", tm,
          f"dispatch_reduction={d_ratio:.2f}x;"
          f"speedup={ts / max(tm, 1e-9):.2f}x")
+
+    run_overlap(keys, gs, seq, lanes=lanes, block=block)
     return rows
+
+
+def run_overlap(keys, gs, seq, *, lanes: int, block: int):
+    """ISSUE 5's acceptance evidence: the async scheduler admits a
+    mid-flight burst without waiting for pool idle, in fewer scheduler
+    rounds than the blocking two-phase pattern, with per-request results
+    (incl. the per_k reassembled from streamed events) bit-identical to
+    sequential ``solver.solve``."""
+    # keep the early phase below the pool width so the mid-flight burst
+    # has free slots to land in (a full pool admits FIFO as slots free —
+    # correct, but the next-dispatch evidence needs free lanes)
+    half = min(max(1, len(gs) // 2), max(1, lanes // 2))
+    early, late = list(zip(keys, gs))[:half], list(zip(keys, gs))[half:]
+    free = max(0, lanes - half)
+
+    # blocking two-phase baseline: drain to idle, then serve the burst
+    blocking = TwScheduler(lanes=lanes, block=block)
+    b_rids = [blocking.submit(g) for _k, g in early]
+    blocking.run()
+    b_rids += [blocking.submit(g) for _k, g in late]
+    blocking.run()
+
+    # async overlap: the burst lands while dispatch 1 is in flight and is
+    # admitted immediately (host bookkeeping under the flying device)
+    engine_lib.reset_counters()
+    overlap = TwScheduler(lanes=lanes, block=block)
+    events = {}
+
+    def submit(g):
+        evs = []
+        rid = overlap.submit(g, on_event=evs.append)
+        events[rid] = evs
+        return rid
+
+    with Timer() as t_async:
+        rids = [submit(g) for _k, g in early]
+        launched = overlap.launch()
+        rids += [submit(g) for _k, g in late]     # mid-flight arrivals
+        overlap.poll_admissions()
+        if launched:
+            overlap.sync()
+        done = overlap.run()
+    c = dict(engine_lib.COUNTERS)
+
+    late_adm = [next(e["round"] for e in events[r] if e["event"] ==
+                     "admitted") for r in rids[half:]]
+    mode = f"async={lanes}"
+    print(f"{mode:<14} {t_async.seconds:>8.2f} "
+          f"{len(gs) / max(t_async.seconds, 1e-9):>8.2f} "
+          f"{c['dispatches']:>10} {c['host_syncs']:>10} "
+          f"{overlap.pool_bytes() / 2**20:>9.2f}", flush=True)
+    print(f"-> overlap: late burst admitted at round(s) {late_adm} while "
+          f"round 1 was in flight; {overlap.rounds} rounds vs "
+          f"{blocking.rounds} blocking two-phase rounds", flush=True)
+    # the burst lands in the free lanes for the NEXT dispatch (round 2),
+    # never waiting for the pool to go idle; past the free lanes it
+    # queues FIFO behind them as slots recycle
+    assert all(r <= 2 for r in late_adm[:free]), \
+        "mid-flight arrivals must be admitted for the next dispatch"
+    assert overlap.rounds < blocking.rounds, \
+        "overlap must beat waiting for pool idle"
+
+    # parity incl. the streamed per_k deltas
+    for key, ref, rid in zip(keys, seq, rids):
+        res = done[rid]
+        assert (ref.width, ref.exact, ref.expanded, ref.per_k) == \
+            (res.width, res.exact, res.expanded, res.per_k), (key, ref, res)
+        streamed = {}
+        for e in events[rid]:
+            if e["event"] == "rung_decided":
+                streamed.setdefault(e["block"], {})[e["k"]] = {
+                    "feasible": e["feasible"], "inexact": e["inexact"],
+                    "expanded": e["expanded"]}
+        searched = {blk: pk for blk, pk in res.per_k.items() if pk}
+        assert streamed == searched, (key, streamed, searched)
+    emit("serve_throughput/async_overlap", t_async.seconds,
+         f"rounds={overlap.rounds};blocking_rounds={blocking.rounds};"
+         f"late_admit_rounds={'+'.join(map(str, late_adm))};"
+         f"dispatches={c['dispatches']}")
 
 
 if __name__ == "__main__":

@@ -101,6 +101,14 @@ def plan_capacity(n: int, w: Optional[int] = None, *, lanes: int = 1,
     ``budget_bytes="auto"`` to read ``backend.device_memory_budget()``).
     A binding budget may reintroduce drops — runs stay correct, but carry
     the usual overflow inexactness instead of the parity guarantee.
+
+    Runnable example::
+
+        from repro.core import batch
+        batch.plan_capacity(10, block=1 << 11)            # -> 4096
+        batch.plan_capacity(25)                           # -> 131072 (2^17)
+        batch.plan_capacity(14, 1, lanes=8,               # pool under a
+                            budget_bytes=8 * 1024 * 4)    # 32 KiB budget
     """
     if n <= 1:
         need = 1
@@ -195,28 +203,44 @@ def _pack_lanes(lanes: Sequence[Lane], n_max: int, w: int):
 _TRIVIAL = Graph(1, np.zeros((1, 1), dtype=bool), "pad")
 
 
-def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
-                 block: int, mode: str,
-                 use_mmw: bool, m_bits: int, k_hashes: int, schedule: str,
-                 backend: str = "jax", use_simplicial: bool = False,
-                 n_pad: Optional[int] = None,
-                 lane_pad: Optional[int] = None,
-                 cap_max: int = DEFAULT_CAP,
-                 budget_bytes=None) -> List[LaneResult]:
-    """Decide every lane in one dispatch; one host sync for all verdicts.
+def _empty_dispatch() -> engine_lib.DispatchHandle:
+    """A no-op handle: zero lanes, nothing dispatched, nothing to sync."""
+    return engine_lib.DispatchHandle((), lambda host: [],
+                                     _result=[], _done=True)
 
-    ``n_pad`` pins the padded vertex count (callers batching many rounds
-    pass a global n_max so every round hits the same compiled program);
-    ``lane_pad`` rounds the lane axis up with trivial lanes for the same
-    reason (compiled-program cache keyed on B).
 
-    ``cap=None`` sizes the shared per-lane buffer with ``plan_capacity``:
-    the largest lane's drop-free bound, clamped to ``cap_max`` (and to
-    ``budget_bytes`` over the whole pool when given) — results stay
-    bit-identical to a fixed-``cap`` dispatch per the plan's guarantee.
+def decide_lanes_async(lanes: Sequence[Lane], *, cap: Optional[int] = None,
+                       block: int, mode: str,
+                       use_mmw: bool, m_bits: int, k_hashes: int,
+                       schedule: str,
+                       backend: str = "jax", use_simplicial: bool = False,
+                       n_pad: Optional[int] = None,
+                       lane_pad: Optional[int] = None,
+                       cap_max: int = DEFAULT_CAP,
+                       budget_bytes=None) -> engine_lib.DispatchHandle:
+    """Enqueue one multi-lane dispatch without blocking on its verdicts.
+
+    The vmapped program is dispatched (counted) and the per-lane result
+    arrays are held on device in the returned
+    ``engine.DispatchHandle``; ``handle.result()`` performs the single
+    deferred host sync and yields the ``List[LaneResult]``
+    ``decide_lanes`` would have returned.  Between launch and result the
+    host is free — the async solve service (``repro.serve.twscheduler``)
+    admits and plans newly arrived requests there, so they are packed
+    into the *next* dispatch instead of waiting for an idle pool.
+
+        h = batch.decide_lanes_async([batch.Lane(g, 3)], block=32,
+                                     mode="sort", use_mmw=False,
+                                     m_bits=1 << 12, k_hashes=4,
+                                     schedule="while")
+        ...                      # host-side work overlaps the device
+        [verdict] = h.result()   # the only host sync
+
+    All knobs and padding/auto-``cap`` semantics are exactly
+    ``decide_lanes``'s (which is now just launch + immediate result).
     """
     if not lanes:
-        return []
+        return _empty_dispatch()
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
                          m_bits=m_bits, lanes=len(lanes))
@@ -244,11 +268,45 @@ def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
         use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial)
     engine_lib.count(dispatches=1)
-    counts_h, exp_h, drop_h = jax.device_get(
-        (out_fr.count, expanded, dropped))
-    engine_lib.count(host_syncs=1)
-    return [LaneResult(bool(counts_h[i] > 0), bool(drop_h[i] > 0),
-                       int(exp_h[i])) for i in range(live)]
+
+    def finalize(host):
+        counts_h, exp_h, drop_h = host
+        return [LaneResult(bool(counts_h[i] > 0), bool(drop_h[i] > 0),
+                           int(exp_h[i])) for i in range(live)]
+
+    return engine_lib.DispatchHandle((out_fr.count, expanded, dropped),
+                                     finalize)
+
+
+def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
+                 block: int, mode: str,
+                 use_mmw: bool, m_bits: int, k_hashes: int, schedule: str,
+                 backend: str = "jax", use_simplicial: bool = False,
+                 n_pad: Optional[int] = None,
+                 lane_pad: Optional[int] = None,
+                 cap_max: int = DEFAULT_CAP,
+                 budget_bytes=None) -> List[LaneResult]:
+    """Decide every lane in one dispatch; one host sync for all verdicts.
+
+    ``n_pad`` pins the padded vertex count (callers batching many rounds
+    pass a global n_max so every round hits the same compiled program);
+    ``lane_pad`` rounds the lane axis up with trivial lanes for the same
+    reason (compiled-program cache keyed on B).
+
+    ``cap=None`` sizes the shared per-lane buffer with ``plan_capacity``:
+    the largest lane's drop-free bound, clamped to ``cap_max`` (and to
+    ``budget_bytes`` over the whole pool when given) — results stay
+    bit-identical to a fixed-``cap`` dispatch per the plan's guarantee.
+
+    Blocking form of ``decide_lanes_async`` — launch + immediate
+    ``result()``.
+    """
+    return decide_lanes_async(
+        lanes, cap=cap, block=block, mode=mode, use_mmw=use_mmw,
+        m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
+        backend=backend, use_simplicial=use_simplicial, n_pad=n_pad,
+        lane_pad=lane_pad, cap_max=cap_max,
+        budget_bytes=budget_bytes).result()
 
 
 def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
@@ -476,6 +534,15 @@ def solve_many(graphs: Sequence[Graph], *, cap: Optional[int] = None,
     elimination order exactly like ``solver.solve(reconstruct=True)``:
     each block's winning rung is replayed once on the host engine for
     level snapshots (uncounted, so ``expanded`` parity is preserved).
+
+    Runnable example (suite batching; for a *concurrent request stream*
+    with per-request knobs and streaming, use the serve scheduler —
+    DESIGN.md §10/§11)::
+
+        from repro.core import batch, graph
+        res = batch.solve_many([graph.myciel(4), graph.petersen()],
+                               lanes=8)
+        [r.width for r in res]            # -> [10, 4]
     """
     from . import solver as solver_lib   # lazy: solver imports this module
 

@@ -33,7 +33,9 @@ instances.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Any, Callable
 
 import numpy as np
 import jax
@@ -59,6 +61,49 @@ def reset_counters():
 def count(dispatches: int = 0, host_syncs: int = 0):
     COUNTERS["dispatches"] += dispatches
     COUNTERS["host_syncs"] += host_syncs
+
+
+@dataclasses.dataclass
+class DispatchHandle:
+    """An issued device program whose host sync is deferred.
+
+    JAX dispatches asynchronously: the jitted call returns device arrays
+    immediately while the device keeps computing, and the host only
+    blocks when it *reads* them.  The engine entry points exploit that by
+    splitting every decide into launch (enqueue the program, hold the
+    result arrays) and ``result()`` (the single deferred ``device_get``):
+    between the two, the caller owns the host — the async solve service
+    (``repro.serve.twscheduler``) runs admission and planning for the
+    *next* dispatch there, overlapping host bookkeeping with device work.
+
+    ``result()`` performs the one host sync (counted in ``COUNTERS``),
+    converts through ``finalize``, and caches — calling it again is free.
+    ``ready()`` is a non-blocking poll of the underlying arrays.
+
+        h = fused_decide_launch(adj, allowed, k, target, n=n, cap=cap, ...)
+        ...                       # host free while the device works
+        feasible, inexact, expanded, fr = h.result()   # the only sync
+    """
+    arrays: Any                     # pytree of in-flight device arrays
+    finalize: Callable[[Any], Any]  # host values -> caller-shaped result
+    _result: Any = None
+    _done: bool = False
+
+    def ready(self) -> bool:
+        """Has the device finished?  Never blocks (best-effort: arrays
+        without an ``is_ready`` probe report True)."""
+        return all(getattr(a, "is_ready", lambda: True)()
+                   for a in jax.tree_util.tree_leaves(self.arrays))
+
+    def result(self):
+        """Block for the verdict: one host sync, then cached."""
+        if not self._done:
+            host = jax.device_get(self.arrays)
+            count(host_syncs=1)
+            self._result = self.finalize(host)
+            self.arrays = None       # release the device references
+            self._done = True
+        return self._result
 
 
 def validate_geometry(cap: int, block: int, *, adaptive: bool = False) -> int:
@@ -271,19 +316,19 @@ _fused_decide = functools.partial(
                      "use_simplicial"))(decide_loop)
 
 
-def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
-                 mode, use_mmw, m_bits, k_hashes, schedule, backend="jax",
-                 use_simplicial=False, fr=None, max_levels=None):
-    """Host entry point: one dispatch, one sync, full verdict.
+def fused_decide_launch(adj_dev, allowed_dev, k: int, target, *, n, cap,
+                        block, mode, use_mmw, m_bits, k_hashes, schedule,
+                        backend="jax", use_simplicial=False, fr=None,
+                        max_levels=None) -> DispatchHandle:
+    """Enqueue one fused decide; return its in-flight ``DispatchHandle``.
 
-    ``fr`` seeds the frontier (defaults to the DP root {∅}); ``max_levels``
-    truncates the run (used by the parity tests to compare intermediate
-    frontiers against the host loop level by level).
-
-    Returns (feasible, inexact, expanded, frontier_host) where
-    ``frontier_host`` is the final (states, count, dropped_total) pulled to
-    the host in the same single transfer as the verdict.
-    """
+    The program is dispatched (counted) but the host does NOT wait: the
+    returned handle holds the device arrays, and ``handle.result()``
+    performs the single deferred sync, yielding the same
+    ``(feasible, inexact, expanded, frontier_host)`` tuple
+    ``fused_decide`` returns.  Callers that have other host work — the
+    async solve service packing its next dispatch — do it between the
+    two."""
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
                          m_bits=m_bits)
@@ -301,13 +346,36 @@ def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial)
     count(dispatches=1)
 
-    states_h, count_h, expanded_h, dropped_h = jax.device_get(
-        (fr.states, fr.count, expanded, dropped))
-    count(host_syncs=1)
+    def finalize(host):
+        states_h, count_h, expanded_h, dropped_h = host
+        feasible = int(count_h) > 0
+        inexact = int(dropped_h) > 0
+        fr_host = frontier_lib.Frontier(np.asarray(states_h),
+                                        np.asarray(count_h),
+                                        np.asarray(dropped_h))
+        return feasible, inexact, int(expanded_h), fr_host
 
-    feasible = int(count_h) > 0
-    inexact = int(dropped_h) > 0
-    fr_host = frontier_lib.Frontier(np.asarray(states_h),
-                                    np.asarray(count_h),
-                                    np.asarray(dropped_h))
-    return feasible, inexact, int(expanded_h), fr_host
+    return DispatchHandle((fr.states, fr.count, expanded, dropped),
+                          finalize)
+
+
+def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
+                 mode, use_mmw, m_bits, k_hashes, schedule, backend="jax",
+                 use_simplicial=False, fr=None, max_levels=None):
+    """Host entry point: one dispatch, one sync, full verdict.
+
+    ``fr`` seeds the frontier (defaults to the DP root {∅}); ``max_levels``
+    truncates the run (used by the parity tests to compare intermediate
+    frontiers against the host loop level by level).
+
+    Returns (feasible, inexact, expanded, frontier_host) where
+    ``frontier_host`` is the final (states, count, dropped_total) pulled to
+    the host in the same single transfer as the verdict.  This is the
+    blocking form of ``fused_decide_launch`` — launch + immediate
+    ``result()``.
+    """
+    return fused_decide_launch(
+        adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
+        mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+        schedule=schedule, backend=backend, use_simplicial=use_simplicial,
+        fr=fr, max_levels=max_levels).result()

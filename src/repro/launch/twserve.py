@@ -11,6 +11,11 @@ current deepening rungs into shared multi-lane dispatches (DESIGN.md
 §10).  ``--compare`` additionally runs the same stream through
 sequential per-request ``solver.solve`` calls, asserts result parity,
 and reports the dispatch/sync reduction.
+
+This CLI drains one fixed stream and exits; for the long-lived service
+process (submit over TCP while dispatches are in flight, per-request
+knobs, streamed rung events) see ``repro.launch.twserved`` and its
+client ``repro.serve.client``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,341 @@
+"""Persistent treewidth solve service: a long-lived socket front end over
+the async scheduler.
+
+``twserve`` (the sibling CLI) drains one request stream and exits;
+``twserved`` is the serving rung the ROADMAP asked for — a process that
+stays up, admits requests *while dispatches are in flight* (the
+scheduler's launch/sync overlap, DESIGN.md §11), and streams per-rung
+anytime lb/ub verdicts to clients before the final width is decided.
+
+    python -m repro.launch.twserved --port 7421 --lanes 4 --block 32
+
+Protocol: newline-delimited JSON over TCP (scriptable from ``nc``; see
+``repro.serve.client`` for the reference client).  One request object
+per line:
+
+    {"op": "submit", "graph": "petersen"}            -> {"ok": true, "rid": 0}
+    {"op": "submit", "n": 4, "edges": [[0,1],[1,2],[2,3]],
+     "mode": "bloom", "speculate": 2}                -> {"ok": true, "rid": 1}
+    {"op": "status", "rid": 0}   -> {"ok": true, "state": "running", "lb": 2, "ub": 4}
+    {"op": "stream", "rid": 0}   -> one event per line, ends with {"event": "done", ...}
+    {"op": "result", "rid": 0}   -> blocks -> {"ok": true, "result": {"width": ...}}
+    {"op": "shutdown"}           -> {"ok": true}  (drains in-flight, exits)
+
+Architecture: one **driver thread** owns all JAX work and steps the
+scheduler (``launch`` → ``poll_admissions`` → ``sync``); socket threads
+(one per connection, stdlib ``socketserver``) only call the scheduler's
+thread-safe ``submit``/``status`` surface and read per-request event
+queues — so a submission landing during a device dispatch is admitted
+mid-flight and packed into the next one.  A per-request override the
+backend cannot run fails that submit alone ({"ok": false, "error":
+"..."}); the pool keeps serving.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socketserver
+import sys
+import threading
+import traceback
+from typing import Callable, Dict, Optional
+
+DEFAULT_PORT = 7421
+
+# finished requests retained for status/result/stream replay before the
+# oldest are evicted (bounds a long-lived server's memory)
+DEFAULT_KEEP_RESULTS = 1024
+
+
+class _EventLog:
+    """Append-only per-request event history with blocking iteration —
+    the bridge between the driver thread (producer) and any number of
+    ``stream`` connections (consumers, each replaying from the start)."""
+
+    def __init__(self):
+        self.events = []
+        self.cond = threading.Condition()
+
+    def push(self, ev: dict) -> None:
+        with self.cond:
+            self.events.append(ev)
+            self.cond.notify_all()
+
+    def iter_events(self, stopped: Callable[[], bool]):
+        """Yield events in order until ``done``; ``stopped()`` is the
+        give-up probe — during a shutdown *drain* it must stay False so
+        blocked consumers still receive the results of admitted work."""
+        i = 0
+        while True:
+            with self.cond:
+                while i >= len(self.events):
+                    if stopped():
+                        return
+                    self.cond.wait(timeout=0.2)
+            ev = self.events[i]
+            i += 1
+            yield ev
+            if ev.get("event") == "done":
+                return
+
+
+def _wire_to_graph(msg: dict):
+    from repro.core import graph as graph_lib
+
+    if "graph" in msg:
+        name = msg["graph"]
+        if name not in graph_lib.REGISTRY:
+            raise ValueError(f"unknown graph {name!r}; known: "
+                             f"{sorted(graph_lib.REGISTRY)}")
+        return graph_lib.REGISTRY[name]()
+    if "n" in msg:
+        return graph_lib.from_edges(int(msg["n"]), msg.get("edges", []),
+                                    name=msg.get("name", "wire"))
+    raise ValueError('submit needs "graph": <registry name> or '
+                     '"n" + "edges"')
+
+
+_KNOBS = ("reconstruct", "start_k", "mode", "use_mmw", "use_simplicial",
+          "cap", "speculate")
+
+
+class TwServer:
+    """The persistent service: scheduler + driver thread + TCP front end.
+
+    Built separately from ``main`` so tests can run it in-process::
+
+        srv = TwServer(port=0, lanes=2, block=32)   # port 0: ephemeral
+        srv.start()
+        ... TwClient(port=srv.port) ...
+        srv.close()
+    """
+
+    def __init__(self, *, host: str = "127.0.0.1", port: int = DEFAULT_PORT,
+                 keep_results: int = DEFAULT_KEEP_RESULTS, **sched_kw):
+        from repro.serve.twscheduler import TwScheduler
+
+        self.sched = TwScheduler(**sched_kw)
+        self.keep_results = max(1, int(keep_results))
+        self._logs: Dict[int, _EventLog] = {}
+        self._stop = threading.Event()
+        self._wake = threading.Condition()
+        self._driver: Optional[threading.Thread] = None
+
+        outer = self
+
+        class _Handler(socketserver.StreamRequestHandler):
+            def handle(self):
+                line = self.rfile.readline()
+                if not line:
+                    return
+                try:
+                    msg = json.loads(line)
+                    outer._handle(msg, self.wfile)
+                except Exception as e:      # noqa: BLE001 — wire boundary
+                    _send(self.wfile, {"ok": False, "error": str(e)})
+
+        class _TCP(socketserver.ThreadingTCPServer):
+            allow_reuse_address = True
+            daemon_threads = True
+
+        self._tcp = _TCP((host, port), _Handler)
+        self.host, self.port = self._tcp.server_address[:2]
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> None:
+        """Spawn the driver and acceptor threads; returns immediately."""
+        self._driver = threading.Thread(target=self._drive,
+                                        name="twserved-driver", daemon=True)
+        self._driver.start()
+        self._acceptor = threading.Thread(target=self._tcp.serve_forever,
+                                          name="twserved-accept",
+                                          daemon=True)
+        self._acceptor.start()
+
+    def close(self) -> None:
+        """Stop accepting, drain the driver, release the socket."""
+        self._stop.set()
+        with self._wake:
+            self._wake.notify_all()
+        self._tcp.shutdown()
+        self._tcp.server_close()
+        if self._driver is not None:
+            self._driver.join(timeout=30)
+
+    def serve_until_shutdown(self) -> None:
+        """Block the calling thread until a shutdown request arrives."""
+        self._stop.wait()
+        self.close()
+
+    # --------------------------------------------------------------- driver
+
+    def _drive(self):
+        """The one thread that owns JAX: overlapped scheduler steps while
+        busy, condition-wait while idle.  A raising step must never kill
+        the only thread that advances the pool — it is logged, the
+        scheduler recovers its in-flight state, and driving resumes."""
+        while not self._stop.is_set():
+            try:
+                stepped = self.sched.step()
+                self._evict()
+            except Exception:        # noqa: BLE001 — keep the pool alive
+                traceback.print_exc()
+                self.sched.recover()
+                self._stop.wait(timeout=0.5)    # never a hot error loop
+                continue
+            if not stepped:
+                with self._wake:
+                    self._wake.wait(timeout=0.2)
+        # drain: finish what was admitted before the shutdown request
+        try:
+            self.sched.run()
+        except Exception:            # noqa: BLE001
+            traceback.print_exc()
+            self.sched.recover()
+
+    def _evict(self):
+        """Bound a long-lived server's memory: keep only the newest
+        ``keep_results`` finished requests' results/event logs (evicted
+        rids answer ``status``/``result``/``stream`` as unknown)."""
+        done = self.sched.done
+        if len(done) <= self.keep_results:
+            return
+        for rid in sorted(done)[:len(done) - self.keep_results]:
+            done.pop(rid, None)
+            self._logs.pop(rid, None)
+
+    def _stopped_and_drained(self) -> bool:
+        """The give-up probe for blocked stream/result consumers: only
+        after the shutdown drain finished can a missing done event never
+        arrive."""
+        return self._stop.is_set() and not (
+            self._driver is not None and self._driver.is_alive())
+
+    # ------------------------------------------------------------- protocol
+
+    def _handle(self, msg: dict, wfile):
+        op = msg.get("op")
+        if op == "ping":
+            _send(wfile, {"ok": True})
+        elif op == "submit":
+            if self._stop.is_set():
+                raise RuntimeError("server is shutting down")
+            g = _wire_to_graph(msg)
+            knobs = {k: msg[k] for k in _KNOBS if msg.get(k) is not None}
+            log = _EventLog()
+            rid = self.sched.submit(g, on_event=log.push, **knobs)
+            self._logs[rid] = log
+            with self._wake:
+                self._wake.notify_all()
+            _send(wfile, {"ok": True, "rid": rid})
+        elif op == "status":
+            _send(wfile, {"ok": True, **self.sched.status(_rid(msg))})
+        elif op == "stream":
+            log = self._logs.get(_rid(msg))
+            if log is None:
+                raise ValueError(f"unknown rid {msg.get('rid')}")
+            for ev in log.iter_events(self._stopped_and_drained):
+                _send(wfile, {"ok": True, **ev})
+        elif op == "result":
+            rid = _rid(msg)
+            log = self._logs.get(rid)
+            if log is None:
+                raise ValueError(f"unknown rid {rid}")
+            for _ev in log.iter_events(self._stopped_and_drained):
+                pass                      # block until the done event
+            res = self.sched.done.get(rid)
+            if res is None:               # shutdown hit before this solve
+                raise RuntimeError("server shut down before the result")
+            _send(wfile, {"ok": True, "result": {
+                "width": res.width, "exact": res.exact, "lb": res.lb,
+                "ub": res.ub, "expanded": res.expanded,
+                "order": res.order, "per_k": res.per_k}})
+        elif op == "shutdown":
+            _send(wfile, {"ok": True})
+            self._stop.set()
+            with self._wake:
+                self._wake.notify_all()
+            # shut the acceptor down from a side thread (we are inside a
+            # handler of this very server)
+            threading.Thread(target=self._tcp.shutdown, daemon=True).start()
+        else:
+            raise ValueError(f"unknown op {op!r}")
+
+
+def _send(wfile, obj: dict) -> None:
+    try:
+        wfile.write((json.dumps(obj) + "\n").encode())
+        wfile.flush()
+    except (BrokenPipeError, ConnectionResetError):
+        pass                        # client went away mid-stream
+
+
+def _rid(msg: dict) -> int:
+    if "rid" not in msg:
+        raise ValueError('missing "rid"')
+    return int(msg["rid"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="persistent treewidth solve service (JSON lines/TCP)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=DEFAULT_PORT,
+                    help=f"TCP port (default {DEFAULT_PORT}; 0 = ephemeral)")
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="lane pool size: max requests per shared dispatch")
+    ap.add_argument("--cap", type=int, default=None,
+                    help="frontier rows per lane (power of two). Default: "
+                         "auto via batch.plan_capacity")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="bound the pooled frontier memory; 0 reads the "
+                         "device's free-memory stats")
+    ap.add_argument("--block", type=int, default=1 << 11)
+    ap.add_argument("--mode", default="sort", choices=["sort", "bloom"])
+    ap.add_argument("--mmw", action="store_true")
+    ap.add_argument("--simplicial", action="store_true")
+    ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
+    ap.add_argument("--schedule", default=None,
+                    choices=["doubling", "while", "linear", "matmul"])
+    ap.add_argument("--no-preprocess", action="store_true")
+    ap.add_argument("--keep-results", type=int,
+                    default=DEFAULT_KEEP_RESULTS,
+                    help="finished requests retained for status/result/"
+                         "stream replay before the oldest are evicted")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.core import backend as backend_lib
+
+    budget = None
+    if args.budget_mb is not None:
+        budget = "auto" if args.budget_mb == 0 \
+            else int(args.budget_mb * 2**20)
+    try:
+        srv = TwServer(host=args.host, port=args.port,
+                       keep_results=args.keep_results,
+                       lanes=args.lanes,
+                       cap=args.cap, block=args.block, mode=args.mode,
+                       use_mmw=args.mmw, use_simplicial=args.simplicial,
+                       backend=args.backend, schedule=args.schedule,
+                       use_preprocess=not args.no_preprocess,
+                       budget_bytes=budget, verbose=args.verbose)
+    except backend_lib.BackendCapabilityError as e:
+        print(f"[twserved] unsupported pool configuration: {e}",
+              file=sys.stderr)
+        return 2
+    srv.start()
+    print(f"[twserved] listening on {srv.host}:{srv.port} "
+          f"(lanes={args.lanes}, backend={args.backend}, mode={args.mode})",
+          flush=True)
+    try:
+        srv.serve_until_shutdown()
+    except KeyboardInterrupt:
+        srv.close()
+    print("[twserved] shut down", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

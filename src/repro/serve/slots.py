@@ -13,7 +13,20 @@ immediately:
 
 This module is the slot/admission mechanics they share; everything
 workload-specific (what a slot holds, what one step does, when a slot is
-finished) stays in the schedulers.
+finished) stays in the schedulers.  The async treewidth scheduler
+additionally relies on admission being pure host bookkeeping: ``admit``
+only touches the queue and the slot table, so it is safe to run while a
+batched device dispatch over the *occupied* slots is still in flight
+(DESIGN.md §11's overlap invariant) — an occupied slot is never handed
+out, and a newly filled one simply joins the next dispatch.
+
+Runnable example::
+
+    pool = SlotPool(2)
+    pool.submit("a"); pool.submit("b"); pool.submit("c")
+    pool.admit(lambda item: item.upper())   # -> [(0, "A"), (1, "B")]
+    pool.release(0)                         # slot 0 recycles ...
+    pool.admit(lambda item: item.upper())   # -> [(0, "C")]
 """
 from __future__ import annotations
 
@@ -64,6 +77,11 @@ class SlotPool:
     def active(self) -> List[Tuple[int, object]]:
         """Occupied slots in slot order (the batched-step iteration set)."""
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def free(self) -> int:
+        """Slots currently available to admission."""
+        return sum(1 for s in self.slots if s is None)
 
     @property
     def busy(self) -> bool:

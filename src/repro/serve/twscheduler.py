@@ -1,52 +1,89 @@
-"""Treewidth solve service: continuous batching of solve requests.
+"""Treewidth solve service: asynchronous continuous batching of requests.
 
 The paper keeps the GPU busy by batching many independent wavefront
 expansions per dispatch; this module applies the same principle one level
-up, at the *request* level.  A fixed pool of L lanes
-(``repro.serve.slots.SlotPool`` — the admission core shared with the LM
-scheduler) runs continuous batching over concurrent ``solve`` requests:
+up, at the *request* level, and keeps the host busy too.  A fixed pool of
+L lanes (``repro.serve.slots.SlotPool`` — the admission core shared with
+the LM scheduler) runs continuous batching over concurrent ``solve``
+requests:
 
   * each admitted request holds one lane with its current iterative-
     deepening rung — the ``(adj, allowed, k)`` of its current
     preprocessed block at its current k;
-  * every scheduler step packs all occupied lanes into ONE shared
-    multi-lane dispatch (``batch.decide_lanes``, DESIGN.md §8): the
+  * every scheduler step packs all occupied lanes into shared multi-lane
+    dispatches (``batch.decide_lanes_async``, DESIGN.md §8/§11): the
     vmapped ``decide_loop`` runs every rung concurrently, a finished
     lane's masked early-exit freezing its carry while the others step;
-  * when the dispatch returns, each lane's verdict is fed to its
+  * the dispatch is **launched without blocking** (JAX async dispatch:
+    the device arrays are held in an ``engine.DispatchHandle``, the host
+    sync is deferred).  While the device works, the scheduler runs
+    admission and planning for newly arrived requests — they take free
+    slots immediately and are packed into the *next* dispatch instead of
+    waiting for an idle pool (DESIGN.md §11's overlap pipeline);
+  * when the verdicts are synced, each lane's result is fed to its
     request's ``batch.InstanceState`` (the same per-rung accounting
     ``solve``/``solve_many`` use, so results are bit-identical to
     sequential ``solver.solve`` per request) and the slot is immediately
     recycled — to the request's next rung, its next block, or the next
     queued request.
 
+**Per-request knobs.**  Each ``submit`` may override the pool's dedup
+``mode``, the pruning flags (``use_mmw``/``use_simplicial``), pin an
+explicit frontier ``cap``, or claim a larger lane share (``speculate`` —
+that many consecutive deepening rungs per dispatch, smallest feasible
+wins, accounting identical to the sequential ladder).  Requests whose
+effective configs match share one vmapped program; incompatible configs
+fall back to sub-pool dispatches within the same step (one dispatch per
+config group).  An override the backend cannot run raises
+``BackendCapabilityError`` from that ``submit`` alone — the pool and its
+other requests are unaffected.
+
+**Streaming.**  ``submit(..., on_event=cb)`` streams anytime progress in
+the spirit of Tamaki's heuristic-computation work (PAPERS.md): per-rung
+``rung_started``/``rung_decided`` events carrying running instance-level
+``lb``/``ub`` (lb never decreases, ub never increases; they meet at the
+width when the result is exact) and the ``per_k`` delta, then one final
+``done``.  Per request, ``seq`` is strictly increasing, a block's
+``rung_decided`` events arrive in increasing k, and ``done`` is last —
+see DESIGN.md §11 for the ordering/monotonicity guarantees.
+
 Fairness is structural: admission is FIFO, and every in-flight request
-advances exactly one rung per dispatch (round-robin by construction —
-a hard instance cannot starve the cheap ones behind it, it just keeps
-its one lane while they stream through the remaining L-1).
+advances exactly one rung (or its ``speculate`` share) per step.
 
-Memory: the per-lane frontier buffers are sized by
-``batch.plan_capacity`` (``cap=None``), so a pool full of small blocks
-does not pay L x 2^17 rows; ``budget_bytes`` bounds the whole pool.
-Compiled-program churn is bounded by ratcheting the padded vertex count
-(word-aligned), the planned cap, and the lane axis (always padded to the
-full pool with trivial lanes) — a steady-state service hits one compiled
-program.  See DESIGN.md §10 for the architecture and the parity caveats
-(bloom-mode requests padded into a larger word count than their solo run
-draw a different Monte-Carlo false-positive set; MMW sees padding rows).
+Memory: per-lane frontier buffers are sized by ``batch.plan_capacity``
+(``cap=None``); ``budget_bytes`` bounds the step's whole resident
+footprint — when config groups or speculation make one step launch
+several concurrent dispatches, the budget is split across them (explicit
+per-request ``cap``s are user-pinned and bypass it) — and compiled-
+program churn is bounded by ratcheting the padded vertex count, the
+planned cap (per config group) and the lane axis — a steady-state
+service hits one compiled program per live config group.  See DESIGN.md
+§10 (service + memory planning) and §11 (async pipeline, grouping,
+event guarantees, parity argument).
 
-    sched = TwScheduler(lanes=8)
-    sched.submit(graph.queen(5))
-    sched.submit(graph.myciel(4), reconstruct=True)
-    results = sched.run()          # {rid: solver.SolveResult}
+Runnable example (blocking drain; see ``repro.launch.twserved`` for the
+persistent process and ``repro.serve.client`` for its client)::
+
+    from repro.core import graph
+    from repro.serve.twscheduler import TwScheduler
+
+    events = []
+    sched = TwScheduler(lanes=4, block=32)
+    sched.submit(graph.petersen(), on_event=events.append)
+    sched.submit(graph.myciel(3), use_mmw=True)    # per-request knob
+    results = sched.run()                          # {rid: SolveResult}
+    assert events[-1]["event"] == "done"
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import threading
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import backend as backend_lib
 from repro.core import batch, bitset, bloom
+from repro.core import engine as engine_lib
 from repro.core import frontier as frontier_lib
 from repro.core import solver as solver_lib
 from repro.core.graph import Graph
@@ -56,11 +93,31 @@ from .slots import SlotPool
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One user query: compute tw(g), optionally with a certified order."""
+    """One user query: compute tw(g), optionally with a certified order.
+
+    Fields beyond ``rid``/``g`` are the per-request knobs (``None`` means
+    "inherit the pool default"): ``mode`` picks the dedup (``"sort"`` /
+    ``"bloom"``), ``use_mmw``/``use_simplicial`` the pruning,
+    ``cap`` pins an explicit frontier buffer, and ``speculate`` the lane
+    share (that many consecutive deepening rungs per dispatch).
+    ``on_event`` receives the streaming event dicts (module docstring).
+
+        req = SolveRequest(0, graph.petersen(), mode="bloom", speculate=2)
+    """
     rid: int
     g: Graph
     reconstruct: bool = False
     start_k: Optional[int] = None
+    mode: Optional[str] = None
+    use_mmw: Optional[bool] = None
+    use_simplicial: Optional[bool] = None
+    cap: Optional[int] = None
+    speculate: int = 1
+    on_event: Optional[Callable[[dict], None]] = None
+
+
+# the per-request overridable knobs (subset of decide_kw keys)
+_OVERRIDES = ("mode", "use_mmw", "use_simplicial")
 
 
 def _round32(n: int) -> int:
@@ -70,15 +127,30 @@ def _round32(n: int) -> int:
 
 
 class TwScheduler:
-    """Continuous-batching scheduler over treewidth solve requests.
+    """Asynchronous continuous-batching scheduler over solve requests.
 
-    Solver knobs mirror ``solver.solve`` and apply to every request in
-    the pool (one shared dispatch = one static config).  ``cap=None``
-    (default) auto-sizes each dispatch's per-lane frontier buffer via
-    ``batch.plan_capacity``; ``budget_bytes`` (int or ``"auto"``) bounds
-    the whole L-lane pool.  Results per request are bit-identical to
-    ``solver.solve(g, ...)`` with the same knobs (see DESIGN.md §10 for
-    the two padded-lane caveats inherited from §8).
+    Constructor knobs mirror ``solver.solve`` and set the pool defaults;
+    each ``submit`` may override the per-request subset (class docstring).
+    ``cap=None`` (default) auto-sizes each dispatch's per-lane frontier
+    buffer via ``batch.plan_capacity``; ``budget_bytes`` (int or
+    ``"auto"``) bounds the whole L-lane pool.  Results per request are
+    bit-identical to ``solver.solve(g, ...)`` with the same knobs (see
+    DESIGN.md §10/§11 for the two padded-lane caveats inherited from §8).
+
+    Two driving styles:
+
+    * blocking drain — ``run()`` (or repeated ``step()``), as in the
+      module example;
+    * overlapped — ``launch()`` (admit + enqueue dispatches, returns
+      immediately), then host-side work / ``poll_admissions()`` while the
+      device flies, then ``sync()`` for the verdicts.  ``step()`` is
+      exactly ``launch(); poll_admissions(); sync()``.
+
+    All public methods take an internal lock, so a persistent front end
+    (``repro.launch.twserved``) may ``submit``/``status`` from server
+    threads while one driver thread steps the pool; the device wait in
+    ``sync()`` runs outside the lock, which is what lets submissions
+    land *mid-flight*.
     """
 
     def __init__(self, *, lanes: int = batch.DEFAULT_MAX_LANES,
@@ -109,94 +181,327 @@ class TwScheduler:
                               use_simplicial=use_simplicial)
         self.plan_kw = dict(use_clique=use_clique, use_paths=use_paths)
         self.use_preprocess = use_preprocess
-        self.recon_kw = dict(cap=cap, cap_max=cap_max, **self.decide_kw)
         self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
-        self.rounds = 0                          # shared dispatches issued
+        self.rounds = 0                          # scheduler steps launched
         self._next_rid = 0
-        # monotone ratchets: padded n (word-aligned), planned cap — each
-        # bump compiles one new program, steady state reuses it
+        self._lock = threading.RLock()
+        self._inflight: List[Tuple[object, list]] = []  # (handle, metas)
+        # streaming progress per live rid: [lb, ub, seq] (monotone clamps)
+        self._prog: Dict[int, list] = {}
+        # monotone ratchets: padded n (word-aligned, shared) and, per
+        # config group, the planned cap — each bump compiles one new
+        # program, steady state reuses it
         self._n_pad = 32
-        self._cap_pad = 0
+        self._cap_pad: Dict[tuple, int] = {}
 
     # ------------------------------------------------------------ admission
 
     def submit(self, g: Graph, *, reconstruct: bool = False,
                start_k: Optional[int] = None,
-               rid: Optional[int] = None) -> int:
-        """Queue one solve request; returns its request id."""
-        if rid is None:
-            rid = self._next_rid
-        self._next_rid = max(self._next_rid, rid) + 1
-        self.pool.submit(SolveRequest(rid, g, reconstruct, start_k))
+               rid: Optional[int] = None,
+               mode: Optional[str] = None,
+               use_mmw: Optional[bool] = None,
+               use_simplicial: Optional[bool] = None,
+               cap: Optional[int] = None,
+               speculate: int = 1,
+               on_event: Optional[Callable[[dict], None]] = None) -> int:
+        """Queue one solve request; returns its request id.
+
+        The keyword subset after ``rid`` is the per-request override
+        surface (``SolveRequest``).  An override the pool's backend
+        cannot run raises ``BackendCapabilityError`` (an invalid explicit
+        ``cap`` raises ``ValueError``) *here*, for this request only —
+        the pool keeps serving.  Thread-safe: a front end may call this
+        while a dispatch is in flight; the request is admitted during
+        the flight and packed into the next dispatch."""
+        req = SolveRequest(0, g, reconstruct, start_k, mode=mode,
+                           use_mmw=use_mmw, use_simplicial=use_simplicial,
+                           cap=cap, speculate=max(1, int(speculate)),
+                           on_event=on_event)
+        kw = self._effective_kw(req)
+        backend_lib.validate(kw["backend"], mode=kw["mode"],
+                             schedule=kw["schedule"], use_mmw=kw["use_mmw"],
+                             use_simplicial=kw["use_simplicial"],
+                             m_bits=kw["m_bits"], lanes=len(self.pool))
+        if cap is not None:
+            engine_lib.validate_geometry(cap, self.block)
+        with self._lock:
+            if rid is None:
+                rid = self._next_rid
+            self._next_rid = max(self._next_rid, rid) + 1
+            req.rid = rid
+            self._prog[rid] = [0, max(0, g.n - 1), 0]
+            self.pool.submit(req)
         return rid
 
+    def _effective_kw(self, req: SolveRequest) -> dict:
+        """Pool defaults with this request's overrides applied."""
+        kw = dict(self.decide_kw)
+        for f in _OVERRIDES:
+            v = getattr(req, f)
+            if v is not None:
+                kw[f] = v
+        return kw
+
+    def _group_key(self, req: SolveRequest) -> tuple:
+        """Requests share a vmapped program iff this key matches: the
+        static decide config plus the cap setting (explicit caps pin the
+        jit signature; ``None`` caps share the planned ratchet)."""
+        kw = self._effective_kw(req)
+        return tuple(sorted(kw.items())) + (("cap", req.cap),)
+
     def _start(self, req: SolveRequest):
-        """Admission: build the request's deepening state.  Returns None
-        when the instance decides at admission (trivial graph, lb == ub)
-        — the slot is then recycled to the next queued request at once."""
+        """Admission: build the request's deepening state (preprocess +
+        bounds + first block plan — host-only work, safe to overlap with
+        an in-flight dispatch).  Returns None when the instance decides
+        at admission (trivial graph, lb == ub) — the slot is then
+        recycled to the next queued request at once."""
+        recon_kw = dict(cap=req.cap if req.cap is not None else self.cap,
+                        cap_max=self.cap_max, **self._effective_kw(req))
         inst = batch.InstanceState(
             req.g, solver_lib, use_preprocess=self.use_preprocess,
             plan_kw=dict(start_k=req.start_k, **self.plan_kw),
-            reconstruct=req.reconstruct, recon_kw=self.recon_kw)
+            reconstruct=req.reconstruct, recon_kw=recon_kw)
+        self._emit(req, {"event": "admitted", "name": req.g.name,
+                         "round": self.rounds + 1})
         if inst.result is not None:
             self._finish(req, inst)
             return None
+        self._emit(req, dict(self._bounds_event(req, inst),
+                             event="bounds"))
         return (req, inst)
 
     def _finish(self, req: SolveRequest, inst: batch.InstanceState):
-        self.done[req.rid] = inst.result
+        r = inst.result
+        self.done[req.rid] = r
+        prog = self._prog.pop(req.rid, [0, max(0, req.g.n - 1), 0])
+        lb = max(prog[0], r.width if r.exact else r.lb)
+        self._emit(req, {"event": "done", "width": r.width,
+                         "exact": r.exact, "lb": lb, "ub": r.width,
+                         "expanded": r.expanded, "rounds": self.rounds},
+                   prog=prog)
         if self.verbose:
-            r = inst.result
             print(f"[twserve] req {req.rid} ({req.g.name}): width={r.width}"
                   f" exact={r.exact} expanded={r.expanded}", flush=True)
 
+    # ------------------------------------------------------------ streaming
+
+    def _emit(self, req: SolveRequest, ev: dict, prog: Optional[list] = None):
+        """Deliver one event to the request's callback (never raises —
+        a broken sink must not take down the pool)."""
+        if req.on_event is None:
+            return
+        if prog is None:
+            prog = self._prog.get(req.rid)
+        seq = 0
+        if prog is not None:
+            prog[2] += 1
+            seq = prog[2]
+        ev = dict(ev, rid=req.rid, seq=seq)
+        try:
+            req.on_event(ev)
+        except Exception as e:           # noqa: BLE001 — sink isolation
+            warnings.warn(f"twserve event sink for rid {req.rid} raised "
+                          f"{e!r}; event dropped", stacklevel=2)
+
+    def _bounds_event(self, req: SolveRequest, inst) -> dict:
+        """Running instance-level (lb, ub), clamped monotone against the
+        previously streamed pair.
+
+        lb sources (each a true lower bound on tw(g)): the preprocess
+        bound, the fold of finished blocks (their exact widths), the
+        current block's plan.lb, and its refuted rungs (k0..k-1
+        infeasible ⇒ tw ≥ k — only when k0 was not forced above the
+        genuine bound and no state was dropped).  ub sources (each a true
+        upper bound per part; the instance ub is their max): finished
+        blocks' widths (folded), the current block's heuristic plan.ub,
+        and n-1 for blocks not yet planned."""
+        lb = inst.pre.lb if inst.pre is not None else 0
+        ub_parts = [0]
+        if inst.fold is not None:
+            lb = max(lb, inst.fold.lbs)
+            if inst.fold.exact:
+                lb = max(lb, inst.fold.width)
+            ub_parts.append(inst.fold.width)
+        run = inst.run
+        if run is not None:
+            lb = max(lb, run.plan.lb)
+            if not run.plan.forced and not run.any_inexact:
+                lb = max(lb, run.k)
+            ub_parts.append(run.plan.ub)
+        ub_parts.extend(p.n - 1 for p in inst.parts[inst.bi:])
+        ub = max(ub_parts)
+        prog = self._prog.get(req.rid)
+        if prog is not None:
+            lb = max(lb, prog[0])
+            ub = min(ub, prog[1])
+            prog[0], prog[1] = lb, ub
+        return {"lb": lb, "ub": ub}
+
+    def status(self, rid: int) -> dict:
+        """Queued / running / done snapshot for one request (thread-safe;
+        the front end's ``status`` endpoint)."""
+        with self._lock:
+            if rid in self.done:
+                r = self.done[rid]
+                return {"state": "done", "width": r.width, "exact": r.exact,
+                        "lb": r.lb, "ub": r.ub, "expanded": r.expanded}
+            for _i, (req, inst) in self.pool.active():
+                if req.rid == rid:
+                    return dict(self._bounds_event(req, inst),
+                                state="running")
+            if any(req.rid == rid for req in self.pool.queue):
+                return {"state": "queued"}
+            return {"state": "unknown"}
+
     # ----------------------------------------------------------- the engine
 
+    def launch(self) -> bool:
+        """Admit, pack every occupied lane's current rung(s), and enqueue
+        the dispatches **without waiting for their verdicts** (JAX async
+        dispatch; the handles are held in flight).  Returns False when
+        the pool is idle (nothing launched)."""
+        with self._lock:
+            if self._inflight:
+                raise RuntimeError("launch() with a dispatch in flight; "
+                                   "sync() first")
+            self.pool.admit(self._start)
+            active = self.pool.active()
+            if not active:
+                return False
+            self.rounds += 1
+
+            groups: Dict[tuple, list] = {}
+            for i, (req, inst) in active:
+                groups.setdefault(self._group_key(req), []).append(
+                    (i, req, inst))
+            n_round = max(inst.run.plan.g.n for _i, (_r, inst) in active)
+            self._n_pad = max(self._n_pad, _round32(n_round))
+            L = len(self.pool)
+
+            packed = []
+            for key, members in groups.items():
+                lanes, metas = [], []
+                for i, req, inst in members:
+                    run = inst.run
+                    for kk in range(run.k, min(run.k + req.speculate,
+                                               run.plan.ub)):
+                        lanes.append(batch.Lane(run.plan.graph_at(kk), kk,
+                                                tuple(run.plan.clique)))
+                        metas.append((i, req, inst, kk, run.plan.g.name))
+                        self._emit(req, {"event": "rung_started",
+                                         "block": run.plan.g.name, "k": kk,
+                                         "round": self.rounds})
+                packed.append((key, lanes, metas))
+            # all of the step's dispatches are resident on device at once
+            # (they launch before any sync), so a pool budget must be
+            # split across them, not granted per dispatch
+            n_dispatch = sum(-(-len(lanes) // L) for _k, lanes, _m in packed)
+
+            for key, lanes, metas in packed:
+                kw = dict(key)
+                cap = kw.pop("cap")
+                if cap is None:
+                    cap = self.cap
+                if cap is None:
+                    cap = self._plan_group_cap(key, lanes, n_dispatch)
+                # chunk a speculation-widened group into pool-sized
+                # dispatches (lane axis padded to the full pool so the
+                # steady state reuses one compiled program per group)
+                for lo in range(0, len(lanes), L):
+                    handle = batch.decide_lanes_async(
+                        lanes[lo:lo + L], cap=cap, n_pad=self._n_pad,
+                        lane_pad=L, **kw)
+                    self._inflight.append((handle, metas[lo:lo + L]))
+            return True
+
+    def _plan_group_cap(self, key: tuple, lanes: list,
+                        n_dispatch: int = 1) -> int:
+        """plan_capacity for one config group, ratcheted per group key
+        (compile stability) and re-clamped whenever the budget share
+        shrinks — because the padded word count grew, or because the
+        step launches several concurrent dispatches (``n_dispatch``)
+        that split ``budget_bytes`` between them."""
+        budget = self.budget_bytes
+        if budget is not None:
+            budget = int(budget) // max(1, n_dispatch)
+        w = bitset.n_words(self._n_pad)
+        cap = max(batch.plan_capacity(
+            lane.g.n, w, lanes=len(self.pool), block=self.block,
+            cap_max=self.cap_max, budget_bytes=budget)
+            for lane in lanes)
+        cap = max(self._cap_pad.get(key, 0), cap)
+        if budget is not None:
+            # the budget outranks the compile-stability ratchet: a cap
+            # ratcheted under a smaller word count (or a
+            # fewer-dispatches step) must shrink, or the resident pools
+            # would exceed the bytes the knob promises to bound
+            afford = int(budget) // (len(self.pool) * 4 * max(1, w))
+            cap = min(cap, max(32, batch._pow2_floor(afford)))
+        self._cap_pad[key] = cap
+        return cap
+
+    def poll_admissions(self) -> None:
+        """Overlap bookkeeping: admit and plan newly arrived requests
+        into free slots while the launched dispatches are still in
+        flight.  Touches host state only (queue, slots, preprocessing/
+        bounds of the new requests) — never the in-flight device buffers
+        (DESIGN.md §11's overlap invariant); the admitted requests join
+        the next ``launch()``."""
+        with self._lock:
+            self.pool.admit(self._start)
+
+    def sync(self) -> None:
+        """Block for the in-flight verdicts (the only host syncs of the
+        step), feed them through each request's ``InstanceState`` in rung
+        order, emit ``rung_decided`` events, and recycle finished slots.
+        The device wait runs outside the scheduler lock so submissions
+        and ``status`` calls keep landing mid-flight."""
+        inflight, finished = self._inflight, set()
+        self._inflight = []
+        for handle, metas in inflight:
+            results = handle.result()          # device wait — no lock held
+            with self._lock:
+                for (i, req, inst, k, name), res in zip(metas, results):
+                    if req.rid in finished:
+                        continue   # block decided on an earlier rung this
+                        # round: the sequential ladder never ran this one —
+                        # discard it uncounted (speculation semantics, §8)
+                    cont = inst.feed(k, res)
+                    self._emit(req, dict(
+                        self._bounds_event(req, inst),
+                        event="rung_decided", block=name, k=k,
+                        round=self.rounds, feasible=res.feasible,
+                        inexact=res.inexact, expanded=res.expanded))
+                    if not cont:
+                        finished.add(req.rid)
+                    if inst.result is not None:
+                        self._finish(req, inst)
+                        self.pool.release(i)
+
     def step(self) -> bool:
-        """One shared dispatch: admit, pack every occupied lane's current
-        rung, decide them all at once, recycle finished slots."""
-        self.pool.admit(self._start)
-        active = self.pool.active()
-        if not active:
+        """One overlapped scheduler step: launch the shared dispatches,
+        run admission/planning for new arrivals while the device works,
+        then sync the verdicts and recycle slots."""
+        if not self.launch():
             return False
-
-        lanes, metas = [], []
-        for i, (req, inst) in active:
-            run = inst.run
-            lanes.append(batch.Lane(run.plan.graph_at(run.k), run.k,
-                                    tuple(run.plan.clique)))
-            metas.append((i, req, inst, run.k))
-        self._n_pad = max(self._n_pad,
-                          _round32(max(lane.g.n for lane in lanes)))
-        cap = self.cap
-        if cap is None:
-            w = bitset.n_words(self._n_pad)
-            cap = max(batch.plan_capacity(
-                lane.g.n, w, lanes=len(self.pool), block=self.block,
-                cap_max=self.cap_max, budget_bytes=self.budget_bytes)
-                for lane in lanes)
-            cap = max(self._cap_pad, cap)
-            if self.budget_bytes is not None:
-                # the budget outranks the compile-stability ratchet: a cap
-                # ratcheted under a smaller word count must shrink when a
-                # wider instance grows W, or the pool would exceed the
-                # bytes the knob promises to bound
-                afford = int(self.budget_bytes) // \
-                    (len(self.pool) * 4 * max(1, w))
-                cap = min(cap, max(32, batch._pow2_floor(afford)))
-            self._cap_pad = cap
-
-        results = batch.decide_lanes(
-            lanes, cap=cap, n_pad=self._n_pad, lane_pad=len(self.pool),
-            **self.decide_kw)
-        self.rounds += 1
-
-        for (i, req, inst, k), res in zip(metas, results):
-            inst.feed(k, res)          # may finish block(s) / the instance
-            if inst.result is not None:
-                self._finish(req, inst)
-                self.pool.release(i)
+        self.poll_admissions()
+        self.sync()
         return True
+
+    def recover(self) -> None:
+        """Best-effort cleanup after a raised ``step()`` — a persistent
+        driver must keep driving.  Tries to sync whatever did launch
+        (their verdicts are still valid and feed normally); if even that
+        fails, drops the in-flight handles so the next ``launch()`` can
+        proceed (the affected rungs re-pack from unchanged host state —
+        ``InstanceState`` only advances in ``feed``, so nothing is lost
+        or double-counted)."""
+        try:
+            self.sync()
+        except Exception:                     # noqa: BLE001 — last resort
+            with self._lock:
+                self._inflight = []
 
     def run(self, max_rounds: int = 1_000_000) -> Dict[int, object]:
         """Drain the queue; returns {rid: solver.SolveResult}."""
@@ -207,11 +512,18 @@ class TwScheduler:
             rounds += 1
         return self.done
 
+    @property
+    def in_flight(self) -> bool:
+        """Is a launched dispatch awaiting ``sync()``?"""
+        return bool(self._inflight)
+
     def pool_bytes(self) -> int:
         """Resident frontier-pool footprint of the largest dispatch issued
         so far (lanes x cap x W uint32 rows — ``frontier.frontier_bytes``)."""
-        cap = self.cap if self.cap is not None else \
-            (self._cap_pad or batch.plan_capacity(
-                self._n_pad, block=self.block, cap_max=self.cap_max))
+        cap = self.cap
+        if cap is None:
+            cap = max(self._cap_pad.values(), default=0) or \
+                batch.plan_capacity(self._n_pad, block=self.block,
+                                    cap_max=self.cap_max)
         return frontier_lib.frontier_bytes(cap, bitset.n_words(self._n_pad),
                                            lanes=len(self.pool))

@@ -1,0 +1,129 @@
+"""Persistent ``twserved`` front end: start / submit / stream / shutdown.
+
+Runs the real TCP server in-process on an ephemeral port (one driver
+thread owning JAX, stdlib socketserver threads per connection) and
+drives it through ``repro.serve.client.TwClient`` — plus one raw-socket
+test speaking the JSON-lines protocol by hand (the ``nc`` path from the
+README cookbook).
+"""
+import json
+import socket
+
+import pytest
+
+from repro.core import graph, solver
+from repro.launch.twserved import TwServer
+from repro.serve.client import TwClient, TwServerError
+
+BLOCK = 32
+POOL = dict(lanes=2, cap=1 << 12, block=BLOCK, m_bits=1 << 14)
+
+
+@pytest.fixture()
+def server():
+    srv = TwServer(port=0, **POOL)       # port 0: ephemeral
+    srv.start()
+    yield srv
+    srv.close()
+
+
+def test_submit_stream_result_roundtrip(server):
+    c = TwClient(port=server.port)
+    assert c.ping()
+    rid = c.submit("petersen")
+    evs = list(c.stream(rid))
+    assert evs[0]["event"] == "admitted"
+    assert evs[-1]["event"] == "done"
+    ks = [e["k"] for e in evs if e["event"] == "rung_decided"]
+    assert ks == sorted(ks) and ks
+    bounds = [(e["lb"], e["ub"]) for e in evs if "lb" in e]
+    assert all(a[0] <= b[0] and a[1] >= b[1]
+               for a, b in zip(bounds, bounds[1:]))
+
+    res = c.result(rid)
+    ref = solver.solve(graph.petersen(), cap=1 << 12, block=BLOCK)
+    assert (res["width"], res["exact"], res["expanded"]) == \
+        (ref.width, ref.exact, ref.expanded)
+    st = c.status(rid)
+    assert st["state"] == "done" and st["width"] == ref.width
+    # a finished request's stream replays its full history
+    assert [e["seq"] for e in c.stream(rid)] == [e["seq"] for e in evs]
+
+
+def test_submit_wire_graph_with_per_request_knobs(server):
+    c = TwClient(port=server.port)
+    g = graph.myciel(3)
+    rid = c.submit(g, mode="bloom", speculate=2)     # Graph over the wire
+    res = c.result(rid)
+    ref = solver.solve(g, cap=1 << 12, block=BLOCK, mode="bloom",
+                       m_bits=1 << 14)
+    assert (res["width"], res["exact"]) == (ref.width, ref.exact)
+    rid2 = c.submit(g, reconstruct=True)
+    res2 = c.result(rid2)
+    assert res2["order"] is not None
+    assert solver.order_width(g, res2["order"]) == res2["width"]
+
+
+def test_invalid_submits_fail_per_request_and_pool_survives(server):
+    c = TwClient(port=server.port)
+    with pytest.raises(TwServerError, match="unknown graph"):
+        c.submit("nope")
+    with pytest.raises(TwServerError):
+        c.submit("petersen", mode="nope")            # BackendCapabilityError
+    with pytest.raises(TwServerError, match="unknown rid"):
+        c.result(999)
+    rid = c.submit("petersen")                       # pool still serving
+    ref = solver.solve(graph.petersen(), cap=1 << 12, block=BLOCK)
+    assert c.result(rid)["width"] == ref.width
+
+
+def test_raw_json_lines_socket(server):
+    """The nc-equivalent: one JSON line in, JSON lines out."""
+    with socket.create_connection(("127.0.0.1", server.port)) as s:
+        s.sendall(b'{"op": "submit", "n": 4, "edges": '
+                  b'[[0,1],[1,2],[2,3],[3,0]], "name": "c4"}\n')
+        resp = json.loads(s.makefile("r").readline())
+    assert resp["ok"]
+    rid = resp["rid"]
+    with socket.create_connection(("127.0.0.1", server.port)) as s:
+        s.sendall(json.dumps({"op": "result", "rid": rid}).encode() + b"\n")
+        res = json.loads(s.makefile("r").readline())
+    assert res["ok"] and res["result"]["width"] == 2   # tw(C4) = 2
+
+
+def test_result_eviction_bounds_server_memory():
+    """keep_results caps what a long-lived server retains: the oldest
+    finished requests are evicted and answer as unknown."""
+    import time
+    srv = TwServer(port=0, keep_results=2, **POOL)
+    srv.start()
+    try:
+        c = TwClient(port=srv.port)
+        rids = []
+        for _ in range(4):
+            rid = c.submit("myciel3")
+            c.result(rid)                   # finish before the next one
+            rids.append(rid)
+        deadline = time.time() + 10         # driver evicts on its next tick
+        while time.time() < deadline and len(srv.sched.done) > 2:
+            time.sleep(0.1)
+        assert sorted(srv.sched.done) == rids[-2:]
+        assert c.status(rids[0])["state"] == "unknown"
+        with pytest.raises(TwServerError, match="unknown rid"):
+            c.result(rids[0])
+        st = c.status(rids[-1])
+        assert st["state"] == "done"
+    finally:
+        srv.close()
+
+
+def test_shutdown_drains_and_exits():
+    srv = TwServer(port=0, **POOL)
+    srv.start()
+    c = TwClient(port=srv.port)
+    rid = c.submit("petersen")
+    c.shutdown()
+    srv._driver.join(timeout=120)
+    assert not srv._driver.is_alive()
+    assert rid in srv.sched.done        # admitted work drained before exit
+    srv.close()
