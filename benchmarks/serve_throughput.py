@@ -17,6 +17,11 @@ pushes a mixed Table-1 instance stream through
   * ``async=L``    — the same stream with its second half arriving while
     the first dispatch is in flight, vs the blocking two-phase pattern
     (drain to idle, then serve the burst)
+  * ``pipeline=D`` — ISSUE 6's pipelined dispatch: depth 2 launches the
+    next round's projected rungs before the previous round syncs, so
+    each host sync finds the device already covered by queued work
+    (``covered_syncs`` vs ``idle_syncs``) — parity asserted against
+    depth 1 and the sequential baseline
 
 and reports requests/sec, dispatch/host-sync/round counts and the pooled
 frontier footprint, asserting full result parity (width/exactness/
@@ -31,6 +36,12 @@ hardware, as with engine_sync).
     python -m benchmarks.serve_throughput --quick      # CI-sized
     python -m benchmarks.serve_throughput --full
     python -m benchmarks.serve_throughput --lanes 16
+    python -m benchmarks.serve_throughput --json BENCH_serve.json
+
+``--json PATH`` additionally writes the machine-readable record (one
+entry per mode: wall-clock, req/s, dispatch/host-sync/round counts,
+idle vs covered syncs, pool bytes) so CI can archive the perf
+trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -53,9 +64,10 @@ STREAM_FULL = STREAM + ["queen6_6", "mcgee", "dyck", "myciel4"]
 
 
 def run(full: bool = False, quick: bool = False, lanes: int = 8,
-        block: int = 1 << 10):
+        block: int = 1 << 10, json_path: str = None):
     keys = STREAM_FULL if full else (STREAM_QUICK if quick else STREAM)
     gs = [get_instance(k) for k in keys]
+    records = []
 
     header = (f"{'mode':<14} {'time_s':>8} {'req_s':>8} {'dispatches':>10} "
               f"{'host_syncs':>10} {'pool_MiB':>9}")
@@ -92,6 +104,10 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
              f"req_s={len(gs) / max(secs, 1e-9):.2f};"
              f"dispatches={c['dispatches']};host_syncs={c['host_syncs']};"
              f"pool_bytes={pool}")
+        records.append(dict(mode=mode, wall_s=secs,
+                            req_s=len(gs) / max(secs, 1e-9),
+                            dispatches=c["dispatches"],
+                            host_syncs=c["host_syncs"], pool_bytes=pool))
 
     # parity: the service is pure scheduling — every request's result is
     # bit-identical to its solo solve
@@ -111,7 +127,15 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
          f"dispatch_reduction={d_ratio:.2f}x;"
          f"speedup={ts / max(tm, 1e-9):.2f}x")
 
-    run_overlap(keys, gs, seq, lanes=lanes, block=block)
+    records.append(run_overlap(keys, gs, seq, lanes=lanes, block=block))
+    records.extend(run_pipeline(keys, gs, seq, lanes=lanes, block=block))
+
+    if json_path:
+        import json as json_lib
+        with open(json_path, "w") as f:
+            json_lib.dump({"bench": "serve_throughput", "stream": keys,
+                           "lanes": lanes, "modes": records}, f, indent=2)
+        print(f"-> wrote {json_path}", flush=True)
     return rows
 
 
@@ -192,6 +216,58 @@ def run_overlap(keys, gs, seq, *, lanes: int, block: int):
          f"rounds={overlap.rounds};blocking_rounds={blocking.rounds};"
          f"late_admit_rounds={'+'.join(map(str, late_adm))};"
          f"dispatches={c['dispatches']}")
+    return dict(mode=mode, wall_s=t_async.seconds,
+                req_s=len(gs) / max(t_async.seconds, 1e-9),
+                dispatches=c["dispatches"], host_syncs=c["host_syncs"],
+                rounds=overlap.rounds, blocking_rounds=blocking.rounds,
+                pool_bytes=overlap.pool_bytes())
+
+
+def run_pipeline(keys, gs, seq, *, lanes: int, block: int):
+    """ISSUE 6's acceptance evidence: depth-2 pipelined dispatch shows
+    fewer idle host-sync gaps than depth-1 serving of the same stream
+    (every depth-2 sync past the first finds the next round already in
+    flight), with per-request results bit-identical to depth 1 and to
+    sequential ``solver.solve``."""
+    records, stats = [], {}
+    for depth in (1, 2):
+        engine_lib.reset_counters()
+        sched = TwScheduler(lanes=lanes, block=block, pipeline=depth)
+        rids = [sched.submit(g) for g in gs]
+        with Timer() as t:
+            done = sched.run()
+        c = dict(engine_lib.COUNTERS)
+        for key, ref, rid in zip(keys, seq, rids):
+            res = done[rid]
+            assert (ref.width, ref.exact, ref.expanded, ref.per_k) == \
+                (res.width, res.exact, res.expanded, res.per_k), \
+                (key, ref, res)
+        mode = f"pipeline={depth}"
+        print(f"{mode:<14} {t.seconds:>8.2f} "
+              f"{len(gs) / max(t.seconds, 1e-9):>8.2f} "
+              f"{c['dispatches']:>10} {c['host_syncs']:>10} "
+              f"{sched.pool_bytes() / 2**20:>9.2f}", flush=True)
+        emit(f"serve_throughput/{mode}", t.seconds,
+             f"req_s={len(gs) / max(t.seconds, 1e-9):.2f};"
+             f"dispatches={c['dispatches']};host_syncs={c['host_syncs']};"
+             f"rounds={sched.rounds};idle_syncs={sched.idle_syncs};"
+             f"covered_syncs={sched.covered_syncs}")
+        stats[depth] = (sched.idle_syncs, sched.covered_syncs)
+        records.append(dict(mode=mode, wall_s=t.seconds,
+                            req_s=len(gs) / max(t.seconds, 1e-9),
+                            dispatches=c["dispatches"],
+                            host_syncs=c["host_syncs"],
+                            rounds=sched.rounds,
+                            idle_syncs=sched.idle_syncs,
+                            covered_syncs=sched.covered_syncs,
+                            pool_bytes=sched.pool_bytes()))
+    print(f"-> pipeline: depth 2 ran {stats[2][0]} idle / {stats[2][1]} "
+          f"covered host syncs vs depth 1's {stats[1][0]} idle "
+          f"(device kept busy across the sync gap)", flush=True)
+    assert stats[2][1] > 0, "depth 2 must cover syncs with queued rounds"
+    assert stats[2][0] < stats[1][0], \
+        "depth 2 must show fewer idle host-sync gaps than depth 1"
+    return records
 
 
 if __name__ == "__main__":
@@ -201,5 +277,8 @@ if __name__ == "__main__":
         lanes = int(sys.argv[sys.argv.index("--lanes") + 1])
     if "--quick" in sys.argv and "--lanes" not in sys.argv:
         lanes = 4
+    json_path = None
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
     run(full="--full" in sys.argv, quick="--quick" in sys.argv,
-        lanes=lanes)
+        lanes=lanes, json_path=json_path)

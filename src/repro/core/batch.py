@@ -405,6 +405,69 @@ class InstanceState:
     def max_n(self) -> int:
         return max([p.n for p in self.parts], default=1)
 
+    # ------------------------------------------------- anytime accounting
+
+    def bounds(self) -> tuple:
+        """Running instance-level ``(lb, ub)`` — the anytime contract.
+
+        lb sources (each a true lower bound on tw(g)): the preprocess
+        bound, the fold of finished blocks (their exact widths), the
+        current block's ``plan.lb``, and its refuted rungs (k0..k-1
+        infeasible ⇒ tw ≥ k — only when k0 was not forced above the
+        genuine bound and no state was dropped).  ub sources (each a
+        true upper bound per part; the instance ub is their max):
+        finished blocks' widths (folded), the current block's heuristic
+        ``plan.ub``, and n-1 for blocks not yet planned.  The serve
+        scheduler clamps these monotone against the previously streamed
+        pair; the deadline/cancel paths resolve with them directly."""
+        lb = self.pre.lb if self.pre is not None else 0
+        ub_parts = [0]
+        if self.fold is not None:
+            lb = max(lb, self.fold.lbs)
+            if self.fold.exact:
+                lb = max(lb, self.fold.width)
+            ub_parts.append(self.fold.width)
+        run = self.run
+        if run is not None:
+            lb = max(lb, run.plan.lb)
+            if not run.plan.forced and not run.any_inexact:
+                lb = max(lb, run.k)
+            ub_parts.append(run.plan.ub)
+        ub_parts.extend(p.n - 1 for p in self.parts[self.bi:])
+        return lb, max(ub_parts)
+
+    def partial(self) -> tuple:
+        """``(expanded, per_k)`` accounted so far: finished blocks' fold
+        plus the current block's in-progress ladder — the best-so-far
+        work accounting a preempted (deadline) or abandoned (cancel)
+        request reports instead of nothing."""
+        run = self.run
+        if self.fold is None:          # use_preprocess=False: solve_block
+            if run is None:            # shape — per_k keyed directly by k
+                return 0, {}
+            return run.expanded, dict(run.per_k)
+        expanded = self.fold.expanded
+        per_k = dict(self.fold.per_k)
+        if run is not None:
+            expanded += run.expanded
+            per_k[run.plan.g.name] = dict(run.per_k)
+        return expanded, per_k
+
+    def anytime_result(self, lb: Optional[int] = None,
+                       ub: Optional[int] = None):
+        """Resolve the instance *now* with its monotone best-so-far
+        bounds (Tamaki's anytime framing, PAPERS.md): ``width=ub``
+        (a heuristic order of that width exists), ``exact=False``, and
+        the partial ``expanded``/``per_k``.  ``lb``/``ub`` default to
+        ``bounds()``; the scheduler passes its stream-clamped pair so
+        the terminal result agrees with the streamed events."""
+        b_lb, b_ub = self.bounds()
+        lb = b_lb if lb is None else lb
+        ub = b_ub if ub is None else ub
+        expanded, per_k = self.partial()
+        return self.solver.SolveResult(ub, False, lb, ub, expanded,
+                                       time.time() - self.t0, None, per_k)
+
     def _fold(self, bres, name: str, idx: int):
         if self.reconstruct:
             self.block_orders[idx] = bres.order

@@ -105,6 +105,20 @@ class DispatchHandle:
             self._done = True
         return self._result
 
+    def discard(self) -> None:
+        """Abandon the dispatch without ever reading it: release the
+        device references and mark the handle done with no result.  The
+        program still runs to completion on device (a launched XLA
+        program cannot be aborted), but the host never blocks on it and
+        no ``host_syncs`` is counted — the traffic-shaping scheduler uses
+        this for whole-round abandonment (``recover``) and cancelled
+        requests whose verdicts nobody will read.  After ``discard``,
+        ``result()`` returns ``None``."""
+        if not self._done:
+            self.arrays = None
+            self._result = None
+            self._done = True
+
 
 def validate_geometry(cap: int, block: int, *, adaptive: bool = False) -> int:
     """Fail fast on buffer geometry the chunk slicer cannot walk cleanly.

@@ -16,10 +16,26 @@ per line:
     {"op": "submit", "graph": "petersen"}            -> {"ok": true, "rid": 0}
     {"op": "submit", "n": 4, "edges": [[0,1],[1,2],[2,3]],
      "mode": "bloom", "speculate": 2}                -> {"ok": true, "rid": 1}
+    {"op": "submit", "graph": "queen5", "priority": 1,
+     "deadline_s": 2.5}                              -> {"ok": true, "rid": 2}
     {"op": "status", "rid": 0}   -> {"ok": true, "state": "running", "lb": 2, "ub": 4}
-    {"op": "stream", "rid": 0}   -> one event per line, ends with {"event": "done", ...}
+    {"op": "stream", "rid": 0}   -> one event per line, ends with a terminal
+                                    event ({"event": "done" | "cancelled" | "error"})
     {"op": "result", "rid": 0}   -> blocks -> {"ok": true, "result": {"width": ...}}
+    {"op": "cancel", "rid": 0}   -> {"ok": true, "cancelled": true}
     {"op": "shutdown"}           -> {"ok": true}  (drains in-flight, exits)
+
+Traffic shaping (DESIGN.md §12): ``--max-queue`` bounds the admission
+queue — an over-limit submit is *rejected*, not queued::
+
+    {"ok": false, "error": "admission queue full ...", "retry_after": 1.5}
+
+``priority`` (higher = more urgent, weighted FIFO — the base class is
+never starved) and ``deadline_s`` (seconds; past it the request is
+preempted and resolves with its monotone anytime lb/ub, ``exact`` false,
+``timed_out`` true) ride the submit line like any other knob;
+``--pipeline 2`` keeps a second dispatch round in flight so the device
+stays busy across each host sync.
 
 Architecture: one **driver thread** owns all JAX work and steps the
 scheduler (``launch`` → ``poll_admissions`` → ``sync``); socket threads
@@ -47,24 +63,51 @@ DEFAULT_PORT = 7421
 DEFAULT_KEEP_RESULTS = 1024
 
 
+# event names that end a request's stream (mirrors the scheduler's
+# terminal model: done covers deadline expiry via ``timed_out``)
+_TERMINAL_EVENTS = ("done", "cancelled", "error")
+
+
 class _EventLog:
     """Append-only per-request event history with blocking iteration —
     the bridge between the driver thread (producer) and any number of
-    ``stream`` connections (consumers, each replaying from the start)."""
+    ``stream``/``result`` connections (consumers, each replaying from
+    the start).  ``closed`` flips when the terminal event lands;
+    ``readers`` counts registered consumers — eviction must skip a log
+    that is unclosed or still being read (``TwServer._evict``), or a
+    blocked reader would see a finished solve vanish under it."""
 
     def __init__(self):
         self.events = []
         self.cond = threading.Condition()
+        self.readers = 0
+        self.closed = False
 
     def push(self, ev: dict) -> None:
         with self.cond:
             self.events.append(ev)
+            if ev.get("event") in _TERMINAL_EVENTS:
+                self.closed = True
             self.cond.notify_all()
 
+    def acquire(self) -> None:
+        with self.cond:
+            self.readers += 1
+
+    def release(self) -> None:
+        with self.cond:
+            self.readers -= 1
+
+    @property
+    def busy(self) -> bool:
+        with self.cond:
+            return self.readers > 0
+
     def iter_events(self, stopped: Callable[[], bool]):
-        """Yield events in order until ``done``; ``stopped()`` is the
-        give-up probe — during a shutdown *drain* it must stay False so
-        blocked consumers still receive the results of admitted work."""
+        """Yield events in order until the terminal one; ``stopped()`` is
+        the give-up probe — during a shutdown *drain* it must stay False
+        so blocked consumers still receive the results of admitted
+        work."""
         i = 0
         while True:
             with self.cond:
@@ -75,7 +118,7 @@ class _EventLog:
             ev = self.events[i]
             i += 1
             yield ev
-            if ev.get("event") == "done":
+            if ev.get("event") in _TERMINAL_EVENTS:
                 return
 
 
@@ -96,7 +139,7 @@ def _wire_to_graph(msg: dict):
 
 
 _KNOBS = ("reconstruct", "start_k", "mode", "use_mmw", "use_simplicial",
-          "cap", "speculate")
+          "cap", "speculate", "priority", "deadline_s")
 
 
 class TwServer:
@@ -117,6 +160,7 @@ class TwServer:
         self.sched = TwScheduler(**sched_kw)
         self.keep_results = max(1, int(keep_results))
         self._logs: Dict[int, _EventLog] = {}
+        self._logs_lock = threading.Lock()   # _logs map + eviction vs readers
         self._stop = threading.Event()
         self._wake = threading.Condition()
         self._driver: Optional[threading.Thread] = None
@@ -196,14 +240,37 @@ class TwServer:
 
     def _evict(self):
         """Bound a long-lived server's memory: keep only the newest
-        ``keep_results`` finished requests' results/event logs (evicted
-        rids answer ``status``/``result``/``stream`` as unknown)."""
-        done = self.sched.done
-        if len(done) <= self.keep_results:
-            return
-        for rid in sorted(done)[:len(done) - self.keep_results]:
-            done.pop(rid, None)
-            self._logs.pop(rid, None)
+        ``keep_results`` *terminal* requests' results/event logs (evicted
+        rids answer ``status``/``result``/``stream`` as unknown).  A log
+        that is not yet closed (its terminal event has not been
+        delivered) or that a blocked ``stream``/``result`` reader is
+        still draining is skipped this pass — evicting it would turn a
+        finished solve into a bogus "server shut down" error for that
+        reader."""
+        sched = self.sched
+        with self._logs_lock:
+            term = sched.terminal
+            if len(term) <= self.keep_results:
+                return
+            for rid in sorted(term)[:len(term) - self.keep_results]:
+                log = self._logs.get(rid)
+                if log is not None and (log.busy or not log.closed):
+                    continue
+                term.pop(rid, None)
+                sched.done.pop(rid, None)
+                sched.errors.pop(rid, None)
+                self._logs.pop(rid, None)
+
+    def _reader(self, rid: int) -> _EventLog:
+        """Look up a request's event log and register as a reader in one
+        atomic step (vs ``_evict``), so the log cannot be evicted between
+        the lookup and the registration."""
+        with self._logs_lock:
+            log = self._logs.get(rid)
+            if log is None:
+                raise ValueError(f"unknown rid {rid}")
+            log.acquire()
+        return log
 
     def _stopped_and_drained(self) -> bool:
         """The give-up probe for blocked stream/result consumers: only
@@ -221,36 +288,61 @@ class TwServer:
         elif op == "submit":
             if self._stop.is_set():
                 raise RuntimeError("server is shutting down")
+            from repro.serve.slots import QueueFull
+
             g = _wire_to_graph(msg)
             knobs = {k: msg[k] for k in _KNOBS if msg.get(k) is not None}
             log = _EventLog()
-            rid = self.sched.submit(g, on_event=log.push, **knobs)
-            self._logs[rid] = log
+            try:
+                rid = self.sched.submit(g, on_event=log.push, **knobs)
+            except QueueFull as e:        # backpressure: shed with a hint
+                _send(wfile, {"ok": False, "error": str(e),
+                              "retry_after": e.retry_after})
+                return
+            with self._logs_lock:
+                self._logs[rid] = log
             with self._wake:
                 self._wake.notify_all()
             _send(wfile, {"ok": True, "rid": rid})
         elif op == "status":
             _send(wfile, {"ok": True, **self.sched.status(_rid(msg))})
+        elif op == "cancel":
+            cancelled = self.sched.cancel(_rid(msg))
+            with self._wake:
+                self._wake.notify_all()
+            _send(wfile, {"ok": True, "cancelled": cancelled})
         elif op == "stream":
-            log = self._logs.get(_rid(msg))
-            if log is None:
-                raise ValueError(f"unknown rid {msg.get('rid')}")
-            for ev in log.iter_events(self._stopped_and_drained):
-                _send(wfile, {"ok": True, **ev})
+            log = self._reader(_rid(msg))
+            try:
+                for ev in log.iter_events(self._stopped_and_drained):
+                    _send(wfile, {"ok": True, **ev})
+            finally:
+                log.release()
         elif op == "result":
             rid = _rid(msg)
-            log = self._logs.get(rid)
-            if log is None:
-                raise ValueError(f"unknown rid {rid}")
-            for _ev in log.iter_events(self._stopped_and_drained):
-                pass                      # block until the done event
-            res = self.sched.done.get(rid)
-            if res is None:               # shutdown hit before this solve
-                raise RuntimeError("server shut down before the result")
-            _send(wfile, {"ok": True, "result": {
-                "width": res.width, "exact": res.exact, "lb": res.lb,
-                "ub": res.ub, "expanded": res.expanded,
-                "order": res.order, "per_k": res.per_k}})
+            log = self._reader(rid)
+            try:
+                for _ev in log.iter_events(self._stopped_and_drained):
+                    pass                  # block until the terminal event
+                res = self.sched.done.get(rid)
+                if res is None:
+                    t = self.sched.terminal.get(rid)
+                    if t == "cancelled":
+                        raise RuntimeError(f"request {rid} was cancelled")
+                    if t == "error":
+                        raise RuntimeError(self.sched.errors.get(
+                            rid, f"request {rid} failed at admission"))
+                    # shutdown hit before this solve
+                    raise RuntimeError("server shut down before the result")
+                out = {"width": res.width, "exact": res.exact,
+                       "lb": res.lb, "ub": res.ub,
+                       "expanded": res.expanded, "order": res.order,
+                       "per_k": res.per_k}
+                if self.sched.terminal.get(rid) == "timeout":
+                    out["timed_out"] = True
+                _send(wfile, {"ok": True, "result": out})
+            finally:
+                log.release()
         elif op == "shutdown":
             _send(wfile, {"ok": True})
             self._stop.set()
@@ -263,9 +355,20 @@ class TwServer:
             raise ValueError(f"unknown op {op!r}")
 
 
+def _jsonable(x):
+    """json.dumps ``default=``: numpy/jax scalars and arrays (a result's
+    ``order``, ``per_k`` counters, event payload fields) coerce to plain
+    Python values instead of killing the wire response."""
+    if hasattr(x, "tolist"):
+        return x.tolist()
+    if hasattr(x, "item"):
+        return x.item()
+    raise TypeError(f"not JSON serializable: {type(x).__name__}")
+
+
 def _send(wfile, obj: dict) -> None:
     try:
-        wfile.write((json.dumps(obj) + "\n").encode())
+        wfile.write((json.dumps(obj, default=_jsonable) + "\n").encode())
         wfile.flush()
     except (BrokenPipeError, ConnectionResetError):
         pass                        # client went away mid-stream
@@ -299,6 +402,15 @@ def main(argv=None):
     ap.add_argument("--schedule", default=None,
                     choices=["doubling", "while", "linear", "matmul"])
     ap.add_argument("--no-preprocess", action="store_true")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue; over-limit submits "
+                         "are rejected with a retry_after hint")
+    ap.add_argument("--pipeline", type=int, default=1,
+                    help="dispatch pipeline depth: rounds kept in flight "
+                         "before a sync is forced (2 hides host syncs)")
+    ap.add_argument("--prio-weight", type=int, default=4,
+                    help="weighted-FIFO anti-starvation ratio: preferential "
+                         "admissions per base-class admission")
     ap.add_argument("--keep-results", type=int,
                     default=DEFAULT_KEEP_RESULTS,
                     help="finished requests retained for status/result/"
@@ -320,6 +432,8 @@ def main(argv=None):
                        use_mmw=args.mmw, use_simplicial=args.simplicial,
                        backend=args.backend, schedule=args.schedule,
                        use_preprocess=not args.no_preprocess,
+                       max_queue=args.max_queue, pipeline=args.pipeline,
+                       prio_weight=args.prio_weight,
                        budget_bytes=budget, verbose=args.verbose)
     except backend_lib.BackendCapabilityError as e:
         print(f"[twserved] unsupported pool configuration: {e}",

@@ -12,8 +12,10 @@ Wire operations (see ``repro.launch.twserved`` for the server side):
 
   {"op": "submit", "graph": "petersen", ...knobs}   -> {"ok": true, "rid": 0}
   {"op": "status", "rid": 0}                        -> {"ok": true, "state": ...}
-  {"op": "stream", "rid": 0}    -> one event object per line, ending "done"
+  {"op": "stream", "rid": 0}    -> one event object per line, ending with a
+                                   terminal event (done/cancelled/error)
   {"op": "result", "rid": 0}    -> blocks, then {"ok": true, "result": {...}}
+  {"op": "cancel", "rid": 0}                        -> {"ok": true, "cancelled": true}
   {"op": "shutdown"}                                -> {"ok": true}
 
 Runnable example (start a server first, e.g.
@@ -31,10 +33,17 @@ Runnable example (start a server first, e.g.
     c.shutdown()
 
 Per-request knobs (``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
-``speculate``, ``reconstruct``, ``start_k``) ride through ``submit`` to
+``speculate``, ``reconstruct``, ``start_k``, and the traffic-shaping
+pair ``priority``/``deadline_s``) ride through ``submit`` to
 ``TwScheduler.submit`` — an override the pool's backend cannot run fails
 that submit alone with ``TwServerError`` (the scheduler's per-request
-``BackendCapabilityError`` surfaced over the wire).
+``BackendCapabilityError`` surfaced over the wire).  When the server's
+admission queue is bounded (``--max-queue``) an over-limit submit raises
+``TwServerError`` with ``retry_after`` set — back off that many seconds
+and resubmit.  A timed-out request's result carries ``exact: false`` and
+``timed_out: true`` with its monotone anytime lb/ub; ``cancel`` ends a
+request early (its stream terminates with the ``cancelled`` event and
+``result`` raises).
 """
 from __future__ import annotations
 
@@ -48,7 +57,16 @@ DEFAULT_PORT = 7421
 
 
 class TwServerError(RuntimeError):
-    """The server answered {"ok": false} — message carries its error."""
+    """The server answered {"ok": false} — message carries its error.
+
+    ``retry_after`` (seconds, else ``None``) is set when the rejection
+    was backpressure: the server's admission queue was at its bound and
+    the hint estimates when a slot frees up.
+    """
+
+    def __init__(self, msg: str, retry_after: Optional[float] = None):
+        super().__init__(msg)
+        self.retry_after = retry_after
 
 
 def graph_to_wire(g: Graph) -> dict:
@@ -91,7 +109,8 @@ class TwClient:
     def _rpc(self, obj: dict, read_timeout: Optional[float] = -1.0) -> dict:
         for resp in self._request(obj, read_timeout):
             if not resp.get("ok", False):
-                raise TwServerError(resp.get("error", "unknown error"))
+                raise TwServerError(resp.get("error", "unknown error"),
+                                    retry_after=resp.get("retry_after"))
             return resp
         raise TwServerError("connection closed without a response")
 
@@ -102,7 +121,9 @@ class TwClient:
         ``Graph`` or a ``core.graph.REGISTRY`` generator name; ``knobs``
         are the per-request overrides (``reconstruct``, ``start_k``,
         ``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
-        ``speculate``)."""
+        ``speculate``, ``priority``, ``deadline_s``).  Raises
+        ``TwServerError`` with ``retry_after`` set when the server shed
+        the submit under backpressure."""
         req = {"op": "submit", **knobs}
         if isinstance(g, str):
             req["graph"] = g
@@ -111,14 +132,25 @@ class TwClient:
         return int(self._rpc(req)["rid"])
 
     def status(self, rid: int) -> dict:
-        """Queued / running (with running lb/ub) / done snapshot."""
+        """Queued / running (with running lb/ub) / terminal snapshot
+        (``done`` — possibly ``timed_out`` — / ``cancelled`` /
+        ``error``)."""
         return self._rpc({"op": "status", "rid": rid})
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon a queued or running request (frees its lane
+        mid-ladder).  True if something was cancelled; False for
+        unknown or already-terminal rids (idempotent)."""
+        return bool(self._rpc({"op": "cancel", "rid": rid})["cancelled"])
 
     def result(self, rid: int,
                read_timeout: Optional[float] = None) -> dict:
         """Block until the request finishes (no read deadline unless
         ``read_timeout`` is given); returns the result dict (width,
-        exact, lb, ub, expanded, order, per_k)."""
+        exact, lb, ub, expanded, order, per_k; deadline-preempted
+        requests additionally carry ``timed_out: true`` and their
+        anytime bounds).  Raises ``TwServerError`` for a cancelled or
+        admission-failed rid."""
         return self._rpc({"op": "result", "rid": rid},
                          read_timeout)["result"]
 
@@ -126,16 +158,18 @@ class TwClient:
                read_timeout: Optional[float] = None) -> Iterator[dict]:
         """Yield the request's event stream — ``admitted``/``bounds``,
         then per-rung ``rung_started``/``rung_decided`` with running
-        monotone lb/ub, then ``done`` (always last; iteration stops
-        there).  Replays from the first event, so streaming a finished
-        request yields its full history.  Blocks between events without
-        a read deadline unless ``read_timeout`` bounds the gap."""
+        monotone lb/ub, then the terminal event (``done`` — flagged
+        ``timed_out`` for a deadline preemption — ``cancelled`` or
+        ``error``; always last, iteration stops there).  Replays from
+        the first event, so streaming a finished request yields its full
+        history.  Blocks between events without a read deadline unless
+        ``read_timeout`` bounds the gap."""
         for ev in self._request({"op": "stream", "rid": rid},
                                 read_timeout):
             if not ev.get("ok", True):
                 raise TwServerError(ev.get("error", "unknown error"))
             yield ev
-            if ev.get("event") == "done":
+            if ev.get("event") in ("done", "cancelled", "error"):
                 return
 
     def ping(self) -> bool:

@@ -1,4 +1,4 @@
-"""Fixed slot pool + FIFO admission: the shared continuous-batching core.
+"""Fixed slot pool + weighted FIFO admission: the continuous-batching core.
 
 Both serving schedulers are the same machine — a fixed pool of B slots,
 each holding the in-flight state of one admitted request, advanced by a
@@ -20,51 +20,147 @@ batched device dispatch over the *occupied* slots is still in flight
 (DESIGN.md §11's overlap invariant) — an occupied slot is never handed
 out, and a newly filled one simply joins the next dispatch.
 
+Traffic shaping (DESIGN.md §12) lives at this layer too, because both
+schedulers need it and it is pure queue mechanics:
+
+  * **priority classes** — ``submit(item, priority=p)`` files the item
+    under integer class ``p`` (higher = more urgent, FIFO within a
+    class).  Admission pops from the most urgent non-empty class, but a
+    weighted anti-starvation counter guarantees the least urgent class
+    one admission per ``prio_weight`` preferential pops — high-priority
+    requests jump the queue without starving the base class.
+  * **backpressure** — ``max_queue`` bounds the number of *queued*
+    (not yet admitted) items; an over-limit ``submit`` raises
+    ``QueueFull`` instead of growing the queue unboundedly.  The
+    scheduler layer turns that into a reject-with-``retry_after`` reply.
+
 Runnable example::
 
     pool = SlotPool(2)
     pool.submit("a"); pool.submit("b"); pool.submit("c")
+    pool.submit("z", priority=1)            # jumps the FIFO
     pool.admit(lambda item: item.upper())   # -> [(0, "A"), (1, "B")]
     pool.release(0)                         # slot 0 recycles ...
-    pool.admit(lambda item: item.upper())   # -> [(0, "C")]
+    pool.admit(lambda item: item.upper())   # -> [(0, "Z")]  (priority)
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+
+class QueueFull(RuntimeError):
+    """The admission queue is at ``max_queue``: shed this submit.
+
+    ``retry_after`` (seconds, may be ``None`` at the pool layer) is the
+    caller-facing hint: the scheduler estimates it from its recent round
+    wall-clock and queue depth before surfacing the rejection.
+    """
+
+    def __init__(self, msg: str, retry_after: Optional[float] = None):
+        super().__init__(msg)
+        self.retry_after = retry_after
 
 
 class SlotPool:
-    """``n_slots`` recyclable slots fed from a FIFO queue.
+    """``n_slots`` recyclable slots fed from weighted-FIFO priority queues.
 
     A slot is either ``None`` (free) or an arbitrary caller state object.
     ``admit`` pops queued items into free slots through a caller ``start``
     callback, which may return ``None`` to signal "finished at admission"
     (e.g. a trivial instance) — the slot then immediately tries the next
     queued item, so trivial requests never waste a batched step.
+
+    ``max_queue`` bounds the queued backlog (``QueueFull`` on overflow);
+    ``prio_weight`` is the anti-starvation ratio: at most that many
+    consecutive preferential pops before the least urgent waiting class
+    is served once.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, *, max_queue: Optional[int] = None,
+                 prio_weight: int = 4):
         if n_slots < 1:
             raise ValueError(f"need at least one slot (got {n_slots})")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 (got {max_queue})")
         self.slots: List[Optional[object]] = [None] * n_slots
-        self.queue: deque = deque()
+        self.max_queue = max_queue
+        self.prio_weight = max(1, int(prio_weight))
+        self._queues: Dict[int, deque] = {}   # priority class -> FIFO
+        self._starve = 0   # consecutive preferential pops while base waits
 
     def __len__(self) -> int:
         return len(self.slots)
 
-    def submit(self, item) -> None:
-        self.queue.append(item)
+    # ------------------------------------------------------------- queueing
+
+    def submit(self, item, priority: int = 0) -> None:
+        if self.max_queue is not None and self.qsize >= self.max_queue:
+            raise QueueFull(
+                f"admission queue full ({self.qsize} queued, "
+                f"max_queue={self.max_queue}); retry later")
+        self._queues.setdefault(int(priority), deque()).append(item)
+
+    @property
+    def qsize(self) -> int:
+        """Items queued (admitted items do not count)."""
+        return sum(len(q) for q in self._queues.values())
+
+    def queued(self) -> Iterator[object]:
+        """Queued items, most urgent class first, FIFO within a class."""
+        for p in sorted(self._queues, reverse=True):
+            yield from self._queues[p]
+
+    @property
+    def queue(self) -> list:
+        """Snapshot of the queued items in class-then-FIFO order."""
+        return list(self.queued())
+
+    def discard(self, pred: Callable[[object], bool]) -> Optional[object]:
+        """Remove and return the first queued item matching ``pred``
+        (cancellation of a not-yet-admitted request); None if absent."""
+        for p, q in list(self._queues.items()):
+            for item in q:
+                if pred(item):
+                    q.remove(item)
+                    if not q:
+                        del self._queues[p]
+                    return item
+        return None
+
+    def _pop(self):
+        """Weighted-FIFO pop: most urgent class wins, except that after
+        ``prio_weight`` consecutive preferential pops while a less urgent
+        class waits, the least urgent class is served once."""
+        prios = sorted((p for p, q in self._queues.items() if q),
+                       reverse=True)
+        if not prios:
+            return None
+        pick = prios[0]
+        if len(prios) == 1:
+            self._starve = 0
+        elif self._starve >= self.prio_weight:
+            pick = prios[-1]
+            self._starve = 0
+        else:
+            self._starve += 1
+        q = self._queues[pick]
+        item = q.popleft()
+        if not q:
+            del self._queues[pick]
+        return item
+
+    # ------------------------------------------------------------ admission
 
     def admit(self, start: Callable[[object], Optional[object]]
               ) -> List[Tuple[int, object]]:
-        """Fill free slots from the queue; returns [(slot index, state)]."""
+        """Fill free slots from the queues; returns [(slot index, state)]."""
         admitted = []
         for i, s in enumerate(self.slots):
             if s is not None:
                 continue
-            while self.queue:
-                state = start(self.queue.popleft())
+            while self.qsize:
+                state = start(self._pop())
                 if state is not None:
                     self.slots[i] = state
                     admitted.append((i, state))
@@ -86,4 +182,4 @@ class SlotPool:
     @property
     def busy(self) -> bool:
         """Anything queued or in flight?"""
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return bool(self.qsize) or any(s is not None for s in self.slots)

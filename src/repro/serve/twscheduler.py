@@ -27,6 +27,33 @@ requests:
     recycled — to the request's next rung, its next block, or the next
     queued request.
 
+**Traffic shaping (DESIGN.md §12).**  The pool degrades gracefully under
+load instead of queuing unboundedly or holding lanes hostage:
+
+  * ``cancel(rid)`` frees the request's lane mid-ladder (queued requests
+    are dropped from the queue); in-flight verdicts for a cancelled rid
+    are discarded *uncounted* and a terminal ``cancelled`` event is
+    emitted;
+  * ``submit(deadline_s=...)`` preempts the lane at the first ``sync``
+    past the deadline and resolves the request with its monotone
+    best-so-far anytime ``lb``/``ub`` (``exact=False``) — Tamaki's
+    anytime framing: a timed-out request returns bounds, not nothing;
+  * ``submit(priority=...)`` files the request under a priority class:
+    admission pops the most urgent class first but guarantees the base
+    class one admission per ``prio_weight`` preferential pops
+    (weighted FIFO — no starvation);
+  * ``max_queue`` bounds the admission queue; over-limit submits raise
+    ``slots.QueueFull`` carrying a ``retry_after`` hint estimated from
+    the recent round wall-clock and the backlog depth;
+  * ``pipeline`` raises the dispatch depth above 1: round N+1's rungs
+    (each lane's *projected* next ladder steps) are launched over
+    ``engine.DispatchHandle`` before round N syncs, so the device stays
+    busy across the host-sync gap.  A rung the sequential ladder never
+    ran (its block decided earlier) is discarded uncounted at sync —
+    §8's speculation semantics — so parity and COUNTERS semantics are
+    preserved; ``idle_syncs``/``covered_syncs`` count how often a sync
+    left the device idle vs covered by a queued round.
+
 **Per-request knobs.**  Each ``submit`` may override the pool's dedup
 ``mode``, the pruning flags (``use_mmw``/``use_simplicial``), pin an
 explicit frontier ``cap``, or claim a larger lane share (``speculate`` —
@@ -42,24 +69,28 @@ other requests are unaffected.
 the spirit of Tamaki's heuristic-computation work (PAPERS.md): per-rung
 ``rung_started``/``rung_decided`` events carrying running instance-level
 ``lb``/``ub`` (lb never decreases, ub never increases; they meet at the
-width when the result is exact) and the ``per_k`` delta, then one final
-``done``.  Per request, ``seq`` is strictly increasing, a block's
-``rung_decided`` events arrive in increasing k, and ``done`` is last —
-see DESIGN.md §11 for the ordering/monotonicity guarantees.
+width when the result is exact) and the ``per_k`` delta, then one
+terminal event — ``done`` (with ``timed_out: true`` when a deadline
+preempted the request), ``cancelled``, or ``error`` (admission failed).
+Per request, ``seq`` is strictly increasing, a block's ``rung_decided``
+events arrive in increasing k, and the terminal event is last — see
+DESIGN.md §11/§12 for the ordering/monotonicity guarantees.  Sinks are
+invoked *outside* the scheduler lock (events are buffered under the lock
+and delivered after release), so a slow sink never stalls dispatch.
 
-Fairness is structural: admission is FIFO, and every in-flight request
-advances exactly one rung (or its ``speculate`` share) per step.
+Fairness is structural: admission is weighted FIFO, and every in-flight
+request advances exactly one rung (or its ``speculate`` share) per step.
 
 Memory: per-lane frontier buffers are sized by ``batch.plan_capacity``
 (``cap=None``); ``budget_bytes`` bounds the step's whole resident
-footprint — when config groups or speculation make one step launch
-several concurrent dispatches, the budget is split across them (explicit
+footprint — when config groups, speculation or pipelining make several
+dispatches resident at once, the budget is split across them (explicit
 per-request ``cap``s are user-pinned and bypass it) — and compiled-
 program churn is bounded by ratcheting the padded vertex count, the
 planned cap (per config group) and the lane axis — a steady-state
 service hits one compiled program per live config group.  See DESIGN.md
-§10 (service + memory planning) and §11 (async pipeline, grouping,
-event guarantees, parity argument).
+§10 (service + memory planning), §11 (async pipeline, grouping, event
+guarantees, parity argument) and §12 (traffic shaping).
 
 Runnable example (blocking drain; see ``repro.launch.twserved`` for the
 persistent process and ``repro.serve.client`` for its client)::
@@ -71,6 +102,8 @@ persistent process and ``repro.serve.client`` for its client)::
     sched = TwScheduler(lanes=4, block=32)
     sched.submit(graph.petersen(), on_event=events.append)
     sched.submit(graph.myciel(3), use_mmw=True)    # per-request knob
+    rid = sched.submit(graph.queen(5), priority=1) # jumps the queue
+    sched.cancel(rid)                              # ... and is abandoned
     results = sched.run()                          # {rid: SolveResult}
     assert events[-1]["event"] == "done"
 """
@@ -78,8 +111,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import warnings
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import backend as backend_lib
 from repro.core import batch, bitset, bloom
@@ -88,7 +122,7 @@ from repro.core import frontier as frontier_lib
 from repro.core import solver as solver_lib
 from repro.core.graph import Graph
 
-from .slots import SlotPool
+from .slots import QueueFull, SlotPool
 
 
 @dataclasses.dataclass
@@ -100,7 +134,10 @@ class SolveRequest:
     ``"bloom"``), ``use_mmw``/``use_simplicial`` the pruning,
     ``cap`` pins an explicit frontier buffer, and ``speculate`` the lane
     share (that many consecutive deepening rungs per dispatch).
-    ``on_event`` receives the streaming event dicts (module docstring).
+    ``priority`` is the admission class (higher = more urgent) and
+    ``deadline`` the absolute ``time.monotonic()`` instant past which the
+    request is preempted with its anytime bounds.  ``on_event`` receives
+    the streaming event dicts (module docstring).
 
         req = SolveRequest(0, graph.petersen(), mode="bloom", speculate=2)
     """
@@ -113,11 +150,18 @@ class SolveRequest:
     use_simplicial: Optional[bool] = None
     cap: Optional[int] = None
     speculate: int = 1
+    priority: int = 0
+    deadline: Optional[float] = None
     on_event: Optional[Callable[[dict], None]] = None
 
 
 # the per-request overridable knobs (subset of decide_kw keys)
 _OVERRIDES = ("mode", "use_mmw", "use_simplicial")
+
+# terminal request states (the value of ``TwScheduler.terminal[rid]``);
+# "done" and "timeout" carry a result in ``done[rid]``, "error" carries a
+# message in ``errors[rid]``, "cancelled" carries neither
+TERMINAL_STATES = ("done", "timeout", "cancelled", "error")
 
 
 def _round32(n: int) -> int:
@@ -137,20 +181,29 @@ class TwScheduler:
     bit-identical to ``solver.solve(g, ...)`` with the same knobs (see
     DESIGN.md §10/§11 for the two padded-lane caveats inherited from §8).
 
+    Traffic-shaping knobs (DESIGN.md §12): ``max_queue`` bounds the
+    admission queue (``QueueFull`` with ``retry_after`` on overflow),
+    ``prio_weight`` is the weighted-FIFO anti-starvation ratio, and
+    ``pipeline`` the dispatch depth — how many launched rounds may be in
+    flight before a ``sync`` is forced (depth 2 keeps the device busy
+    across the host-sync gap; discarded speculative rungs keep parity).
+
     Two driving styles:
 
     * blocking drain — ``run()`` (or repeated ``step()``), as in the
       module example;
     * overlapped — ``launch()`` (admit + enqueue dispatches, returns
       immediately), then host-side work / ``poll_admissions()`` while the
-      device flies, then ``sync()`` for the verdicts.  ``step()`` is
-      exactly ``launch(); poll_admissions(); sync()``.
+      device flies, then ``sync()`` for the oldest round's verdicts.
+      ``step()`` is ``launch(); poll_admissions(); sync()`` with the
+      sync skipped while the pipeline still has room.
 
     All public methods take an internal lock, so a persistent front end
-    (``repro.launch.twserved``) may ``submit``/``status`` from server
-    threads while one driver thread steps the pool; the device wait in
-    ``sync()`` runs outside the lock, which is what lets submissions
-    land *mid-flight*.
+    (``repro.launch.twserved``) may ``submit``/``status``/``cancel``
+    from server threads while one driver thread steps the pool; the
+    device wait in ``sync()`` runs outside the lock, which is what lets
+    submissions land *mid-flight*, and event sinks are invoked after the
+    lock is released, so a slow sink never stalls dispatch.
     """
 
     def __init__(self, *, lanes: int = batch.DEFAULT_MAX_LANES,
@@ -161,7 +214,8 @@ class TwScheduler:
                  use_simplicial: bool = False, use_clique: bool = True,
                  use_paths: bool = True, use_preprocess: bool = True,
                  cap_max: int = batch.DEFAULT_CAP, budget_bytes=None,
-                 verbose: bool = False):
+                 max_queue: Optional[int] = None, prio_weight: int = 4,
+                 pipeline: int = 1, verbose: bool = False):
         if schedule is None:
             schedule = "doubling" if backend == "pallas" else "while"
         backend_lib.validate(backend, mode=mode, schedule=schedule,
@@ -169,11 +223,15 @@ class TwScheduler:
                              m_bits=m_bits, lanes=int(lanes))
         if budget_bytes == "auto":
             budget_bytes = backend_lib.device_memory_budget()
-        self.pool = SlotPool(int(lanes))
+        if pipeline < 1:
+            raise ValueError(f"pipeline depth must be >= 1 (got {pipeline})")
+        self.pool = SlotPool(int(lanes), max_queue=max_queue,
+                             prio_weight=prio_weight)
         self.cap = cap
         self.cap_max = cap_max
         self.budget_bytes = budget_bytes
         self.block = block
+        self.pipeline = int(pipeline)
         self.verbose = verbose
         self.decide_kw = dict(block=block, mode=mode, use_mmw=use_mmw,
                               m_bits=m_bits, k_hashes=k_hashes,
@@ -182,12 +240,31 @@ class TwScheduler:
         self.plan_kw = dict(use_clique=use_clique, use_paths=use_paths)
         self.use_preprocess = use_preprocess
         self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
+        self.errors: Dict[int, str] = {}        # rid -> admission error
+        self.terminal: Dict[int, str] = {}      # rid -> TERMINAL_STATES
         self.rounds = 0                          # scheduler steps launched
+        self.idle_syncs = 0      # syncs that left the device with no round
+        self.covered_syncs = 0   # syncs covered by a pipelined next round
         self._next_rid = 0
         self._lock = threading.RLock()
-        self._inflight: List[Tuple[object, list]] = []  # (handle, metas)
+        # FIFO of launched rounds awaiting sync (pipeline depth entries):
+        # (round_no, [(handle, metas), ...], t_launch)
+        self._rounds: List[tuple] = []
+        # rid -> (run object, next k to launch): the pipeline cursor —
+        # which ladder rungs of the request's CURRENT block are already
+        # in flight, so round N+1 launches the projected next ones
+        self._cursor: Dict[int, tuple] = {}
+        # rids whose in-flight verdicts must be dropped uncounted
+        # (cancelled / deadline-preempted mid-flight)
+        self._discard: Set[int] = set()
         # streaming progress per live rid: [lb, ub, seq] (monotone clamps)
         self._prog: Dict[int, list] = {}
+        # events buffered under the lock, delivered after release —
+        # a slow sink must never stall dispatch (the delivery lock only
+        # serializes sink invocation order, reentrantly)
+        self._pending: List[tuple] = []
+        self._deliver_lock = threading.RLock()
+        self._round_s: Optional[float] = None    # EWMA round wall-clock
         # monotone ratchets: padded n (word-aligned, shared) and, per
         # config group, the planned cap — each bump compiles one new
         # program, steady state reuses it
@@ -204,6 +281,8 @@ class TwScheduler:
                use_simplicial: Optional[bool] = None,
                cap: Optional[int] = None,
                speculate: int = 1,
+               priority: int = 0,
+               deadline_s: Optional[float] = None,
                on_event: Optional[Callable[[dict], None]] = None) -> int:
         """Queue one solve request; returns its request id.
 
@@ -211,12 +290,22 @@ class TwScheduler:
         surface (``SolveRequest``).  An override the pool's backend
         cannot run raises ``BackendCapabilityError`` (an invalid explicit
         ``cap`` raises ``ValueError``) *here*, for this request only —
-        the pool keeps serving.  Thread-safe: a front end may call this
-        while a dispatch is in flight; the request is admitted during
-        the flight and packed into the next dispatch."""
+        the pool keeps serving.  ``priority`` picks the admission class,
+        ``deadline_s`` (seconds from now) arms anytime preemption.  When
+        the admission queue is at ``max_queue`` the submit is rejected
+        with ``slots.QueueFull`` carrying a ``retry_after`` hint — the
+        backpressure contract.  A ``rid`` colliding with a previously
+        issued one raises ``ValueError`` (it would clobber the live or
+        finished request's progress).  Thread-safe: a front end may call
+        this while a dispatch is in flight; the request is admitted
+        during the flight and packed into the next dispatch."""
+        deadline = None
+        if deadline_s is not None:
+            deadline = time.monotonic() + float(deadline_s)
         req = SolveRequest(0, g, reconstruct, start_k, mode=mode,
                            use_mmw=use_mmw, use_simplicial=use_simplicial,
                            cap=cap, speculate=max(1, int(speculate)),
+                           priority=int(priority), deadline=deadline,
                            on_event=on_event)
         kw = self._effective_kw(req)
         backend_lib.validate(kw["backend"], mode=kw["mode"],
@@ -226,13 +315,32 @@ class TwScheduler:
         if cap is not None:
             engine_lib.validate_geometry(cap, self.block)
         with self._lock:
+            if self.pool.max_queue is not None and \
+                    self.pool.qsize >= self.pool.max_queue:
+                raise QueueFull(
+                    f"admission queue full ({self.pool.qsize} queued, "
+                    f"max_queue={self.pool.max_queue})",
+                    retry_after=self._retry_after())
             if rid is None:
                 rid = self._next_rid
+            elif rid < self._next_rid:
+                raise ValueError(
+                    f"rid {rid} already issued (next fresh rid is "
+                    f"{self._next_rid}); duplicate rids would clobber the "
+                    "live or finished request")
             self._next_rid = max(self._next_rid, rid) + 1
             req.rid = rid
             self._prog[rid] = [0, max(0, g.n - 1), 0]
-            self.pool.submit(req)
+            self.pool.submit(req, priority=req.priority)
         return rid
+
+    def _retry_after(self) -> float:
+        """Backpressure hint: how long until a queue slot plausibly
+        frees — the EWMA round wall-clock times the number of admission
+        waves the backlog needs to drain through the lane pool."""
+        per_round = self._round_s if self._round_s else 1.0
+        waves = -(-(self.pool.qsize + 1) // max(1, len(self.pool)))
+        return round(max(0.05, per_round * waves), 3)
 
     def _effective_kw(self, req: SolveRequest) -> dict:
         """Pool defaults with this request's overrides applied."""
@@ -253,17 +361,32 @@ class TwScheduler:
     def _start(self, req: SolveRequest):
         """Admission: build the request's deepening state (preprocess +
         bounds + first block plan — host-only work, safe to overlap with
-        an in-flight dispatch).  Returns None when the instance decides
-        at admission (trivial graph, lb == ub) — the slot is then
-        recycled to the next queued request at once."""
-        recon_kw = dict(cap=req.cap if req.cap is not None else self.cap,
-                        cap_max=self.cap_max, **self._effective_kw(req))
-        inst = batch.InstanceState(
-            req.g, solver_lib, use_preprocess=self.use_preprocess,
-            plan_kw=dict(start_k=req.start_k, **self.plan_kw),
-            reconstruct=req.reconstruct, recon_kw=recon_kw)
-        self._emit(req, {"event": "admitted", "name": req.g.name,
-                         "round": self.rounds + 1})
+        an in-flight dispatch).  Returns None when the request does not
+        take a lane: trivial instance (decided at admission), deadline
+        already expired (anytime-resolved), or admission failure
+        (``error`` terminal event — the failure is isolated to this
+        request; the queue keeps admitting)."""
+        try:
+            self._emit(req, {"event": "admitted", "name": req.g.name,
+                             "round": self.rounds + 1})
+            if req.deadline is not None and \
+                    time.monotonic() >= req.deadline:
+                # expired while queued: resolve with what is known now
+                # (nothing ran, so the trivial 0..n-1 bounds clamped by
+                # any prior stream state)
+                prog = self._prog.get(req.rid) or [0, max(0, req.g.n - 1),
+                                                   0]
+                res = solver_lib.SolveResult(prog[1], False, prog[0],
+                                             prog[1], 0, 0.0, None, {})
+                self._resolve_timeout(req, res)
+                return None
+            inst = batch.InstanceState(
+                req.g, solver_lib, use_preprocess=self.use_preprocess,
+                plan_kw=dict(start_k=req.start_k, **self.plan_kw),
+                reconstruct=req.reconstruct, recon_kw=self._recon_kw(req))
+        except Exception as e:    # noqa: BLE001 — per-request isolation
+            self._fail(req, e)
+            return None
         if inst.result is not None:
             self._finish(req, inst)
             return None
@@ -271,9 +394,14 @@ class TwScheduler:
                              event="bounds"))
         return (req, inst)
 
+    def _recon_kw(self, req: SolveRequest) -> dict:
+        return dict(cap=req.cap if req.cap is not None else self.cap,
+                    cap_max=self.cap_max, **self._effective_kw(req))
+
     def _finish(self, req: SolveRequest, inst: batch.InstanceState):
         r = inst.result
         self.done[req.rid] = r
+        self.terminal[req.rid] = "done"
         prog = self._prog.pop(req.rid, [0, max(0, req.g.n - 1), 0])
         lb = max(prog[0], r.width if r.exact else r.lb)
         self._emit(req, {"event": "done", "width": r.width,
@@ -284,11 +412,90 @@ class TwScheduler:
             print(f"[twserve] req {req.rid} ({req.g.name}): width={r.width}"
                   f" exact={r.exact} expanded={r.expanded}", flush=True)
 
+    def _fail(self, req: SolveRequest, err: Exception):
+        """Admission failed for this request alone: record the error,
+        emit the ``error`` terminal event, keep the pool serving."""
+        msg = f"{type(err).__name__}: {err}"
+        self.errors[req.rid] = msg
+        self.terminal[req.rid] = "error"
+        prog = self._prog.pop(req.rid, [0, 0, 0])
+        self._emit(req, {"event": "error", "error": msg}, prog=prog)
+        if self.verbose:
+            print(f"[twserve] req {req.rid} ({getattr(req.g, 'name', '?')})"
+                  f" failed at admission: {msg}", flush=True)
+
+    def _resolve_timeout(self, req: SolveRequest, res):
+        """Terminal path for deadline expiry: the anytime result (monotone
+        best-so-far lb/ub, ``exact=False``) plus a ``done`` event flagged
+        ``timed_out`` — a timed-out request returns bounds, not nothing."""
+        self.done[req.rid] = res
+        self.terminal[req.rid] = "timeout"
+        prog = self._prog.pop(req.rid, [res.lb, res.ub, 0])
+        self._emit(req, {"event": "done", "width": res.width,
+                         "exact": False, "timed_out": True, "lb": res.lb,
+                         "ub": res.ub, "expanded": res.expanded,
+                         "rounds": self.rounds}, prog=prog)
+        if self.verbose:
+            print(f"[twserve] req {req.rid} ({req.g.name}): deadline "
+                  f"expired, anytime lb={res.lb} ub={res.ub}", flush=True)
+
+    # ------------------------------------------------------ traffic shaping
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon one request: a queued rid is dropped from the queue, a
+        running rid frees its lane immediately (mid-ladder) and any
+        in-flight verdicts for it are discarded uncounted at the next
+        ``sync``.  Emits the terminal ``cancelled`` event (carrying the
+        last streamed lb/ub).  Returns True when something was cancelled;
+        False for unknown or already-terminal rids (idempotent)."""
+        with self._lock:
+            ok = False
+            if rid not in self.terminal:
+                req = self.pool.discard(lambda r: r.rid == rid)
+                if req is None:
+                    for i, (r, _inst) in self.pool.active():
+                        if r.rid == rid:
+                            req = r
+                            self.pool.release(i)     # the lane frees NOW
+                            self._cursor.pop(rid, None)
+                            self._discard.add(rid)   # in-flight verdicts
+                            break
+                if req is not None:
+                    self.terminal[rid] = "cancelled"
+                    prog = self._prog.pop(rid, [0, 0, 0])
+                    self._emit(req, {"event": "cancelled", "lb": prog[0],
+                                     "ub": prog[1], "rounds": self.rounds},
+                               prog=prog)
+                    ok = True
+                    if self.verbose:
+                        print(f"[twserve] req {rid} cancelled", flush=True)
+        self._flush_events()
+        return ok
+
+    def _expire_deadlines(self):
+        """Deadline sweep (under the lock, at sync time): preempt every
+        lane whose request ran past its deadline — resolve it with the
+        anytime bounds, free the lane, and mark any still-in-flight rungs
+        for uncounted discard."""
+        now = time.monotonic()
+        for i, (req, inst) in self.pool.active():
+            if req.deadline is None or now < req.deadline:
+                continue
+            b = self._bounds_event(req, inst)
+            self._resolve_timeout(
+                req, inst.anytime_result(lb=b["lb"], ub=b["ub"]))
+            self.pool.release(i)
+            self._cursor.pop(req.rid, None)
+            self._discard.add(req.rid)
+
     # ------------------------------------------------------------ streaming
 
-    def _emit(self, req: SolveRequest, ev: dict, prog: Optional[list] = None):
-        """Deliver one event to the request's callback (never raises —
-        a broken sink must not take down the pool)."""
+    def _emit(self, req: SolveRequest, ev: dict,
+              prog: Optional[list] = None):
+        """Buffer one event for the request's callback.  The ``seq``
+        stamp is taken under the scheduler lock (ordering guarantees);
+        delivery happens in ``_flush_events`` *after* the lock is
+        released, so a slow or blocking sink never stalls dispatch."""
         if req.on_event is None:
             return
         if prog is None:
@@ -297,40 +504,31 @@ class TwScheduler:
         if prog is not None:
             prog[2] += 1
             seq = prog[2]
-        ev = dict(ev, rid=req.rid, seq=seq)
-        try:
-            req.on_event(ev)
-        except Exception as e:           # noqa: BLE001 — sink isolation
-            warnings.warn(f"twserve event sink for rid {req.rid} raised "
-                          f"{e!r}; event dropped", stacklevel=2)
+        self._pending.append((req.on_event, req.rid, dict(ev, rid=req.rid,
+                                                          seq=seq)))
+
+    def _flush_events(self):
+        """Deliver buffered events outside the scheduler lock.  The
+        delivery lock (reentrant) serializes concurrent flushers so the
+        global emission order is preserved; a raising sink is isolated
+        (warn + drop), never failing the solve."""
+        if not self._pending:
+            return
+        with self._deliver_lock:
+            with self._lock:
+                pending, self._pending = self._pending, []
+            for cb, rid, ev in pending:
+                try:
+                    cb(ev)
+                except Exception as e:   # noqa: BLE001 — sink isolation
+                    warnings.warn(f"twserve event sink for rid {rid} "
+                                  f"raised {e!r}; event dropped",
+                                  stacklevel=2)
 
     def _bounds_event(self, req: SolveRequest, inst) -> dict:
-        """Running instance-level (lb, ub), clamped monotone against the
-        previously streamed pair.
-
-        lb sources (each a true lower bound on tw(g)): the preprocess
-        bound, the fold of finished blocks (their exact widths), the
-        current block's plan.lb, and its refuted rungs (k0..k-1
-        infeasible ⇒ tw ≥ k — only when k0 was not forced above the
-        genuine bound and no state was dropped).  ub sources (each a true
-        upper bound per part; the instance ub is their max): finished
-        blocks' widths (folded), the current block's heuristic plan.ub,
-        and n-1 for blocks not yet planned."""
-        lb = inst.pre.lb if inst.pre is not None else 0
-        ub_parts = [0]
-        if inst.fold is not None:
-            lb = max(lb, inst.fold.lbs)
-            if inst.fold.exact:
-                lb = max(lb, inst.fold.width)
-            ub_parts.append(inst.fold.width)
-        run = inst.run
-        if run is not None:
-            lb = max(lb, run.plan.lb)
-            if not run.plan.forced and not run.any_inexact:
-                lb = max(lb, run.k)
-            ub_parts.append(run.plan.ub)
-        ub_parts.extend(p.n - 1 for p in inst.parts[inst.bi:])
-        ub = max(ub_parts)
+        """Running instance-level (lb, ub) — ``InstanceState.bounds``
+        clamped monotone against the previously streamed pair."""
+        lb, ub = inst.bounds()
         prog = self._prog.get(req.rid)
         if prog is not None:
             lb = max(lb, prog[0])
@@ -339,81 +537,109 @@ class TwScheduler:
         return {"lb": lb, "ub": ub}
 
     def status(self, rid: int) -> dict:
-        """Queued / running / done snapshot for one request (thread-safe;
-        the front end's ``status`` endpoint)."""
+        """Queued / running / terminal snapshot for one request
+        (thread-safe; the front end's ``status`` endpoint).  Terminal
+        states: ``done`` (with ``timed_out: true`` when a deadline
+        preempted it), ``cancelled``, ``error``."""
         with self._lock:
+            t = self.terminal.get(rid)
+            if t == "cancelled":
+                return {"state": "cancelled"}
+            if t == "error":
+                return {"state": "error",
+                        "error": self.errors.get(rid, "admission failed")}
             if rid in self.done:
                 r = self.done[rid]
-                return {"state": "done", "width": r.width, "exact": r.exact,
-                        "lb": r.lb, "ub": r.ub, "expanded": r.expanded}
+                st = {"state": "done", "width": r.width, "exact": r.exact,
+                      "lb": r.lb, "ub": r.ub, "expanded": r.expanded}
+                if t == "timeout":
+                    st["timed_out"] = True
+                return st
             for _i, (req, inst) in self.pool.active():
                 if req.rid == rid:
                     return dict(self._bounds_event(req, inst),
                                 state="running")
-            if any(req.rid == rid for req in self.pool.queue):
+            if any(req.rid == rid for req in self.pool.queued()):
                 return {"state": "queued"}
             return {"state": "unknown"}
 
     # ----------------------------------------------------------- the engine
 
     def launch(self) -> bool:
-        """Admit, pack every occupied lane's current rung(s), and enqueue
+        """Admit, pack every occupied lane's next rung(s), and enqueue
         the dispatches **without waiting for their verdicts** (JAX async
-        dispatch; the handles are held in flight).  Returns False when
-        the pool is idle (nothing launched)."""
+        dispatch; the handles are held in flight).  With ``pipeline > 1``
+        a lane's next rungs are its *projected* ladder steps (the
+        pipeline cursor): the rungs after the ones already in flight for
+        its current block — launched before the previous round syncs, so
+        the device never drains.  Returns False when nothing was packed
+        (idle pool, or every ladder fully in flight)."""
         with self._lock:
-            if self._inflight:
-                raise RuntimeError("launch() with a dispatch in flight; "
-                                   "sync() first")
+            if len(self._rounds) >= self.pipeline:
+                raise RuntimeError(
+                    f"launch() with {len(self._rounds)} round(s) in "
+                    f"flight (pipeline depth {self.pipeline}); sync() "
+                    "first")
             self.pool.admit(self._start)
-            active = self.pool.active()
-            if not active:
-                return False
-            self.rounds += 1
+            members = []          # (slot, req, inst, run, [ks to launch])
+            for i, (req, inst) in self.pool.active():
+                run = inst.run
+                cur = self._cursor.get(req.rid)
+                k0 = cur[1] if (cur is not None and cur[0] is run) \
+                    else run.k
+                hi = min(k0 + req.speculate, run.plan.ub)
+                if k0 >= hi:
+                    continue      # whole remaining ladder already flying
+                members.append((i, req, inst, run, list(range(k0, hi))))
+                self._cursor[req.rid] = (run, hi)
+            if not members:
+                launched = False
+            else:
+                launched = True
+                self.rounds += 1
+                n_round = max(run.plan.g.n
+                              for _i, _r, _s, run, _ks in members)
+                self._n_pad = max(self._n_pad, _round32(n_round))
+                L = len(self.pool)
 
-            groups: Dict[tuple, list] = {}
-            for i, (req, inst) in active:
-                groups.setdefault(self._group_key(req), []).append(
-                    (i, req, inst))
-            n_round = max(inst.run.plan.g.n for _i, (_r, inst) in active)
-            self._n_pad = max(self._n_pad, _round32(n_round))
-            L = len(self.pool)
-
-            packed = []
-            for key, members in groups.items():
-                lanes, metas = [], []
-                for i, req, inst in members:
-                    run = inst.run
-                    for kk in range(run.k, min(run.k + req.speculate,
-                                               run.plan.ub)):
+                groups: Dict[tuple, tuple] = {}
+                for i, req, inst, run, ks in members:
+                    lanes, metas = groups.setdefault(self._group_key(req),
+                                                     ([], []))
+                    for kk in ks:
                         lanes.append(batch.Lane(run.plan.graph_at(kk), kk,
                                                 tuple(run.plan.clique)))
-                        metas.append((i, req, inst, kk, run.plan.g.name))
+                        metas.append((i, req, inst, run, kk,
+                                      run.plan.g.name))
                         self._emit(req, {"event": "rung_started",
-                                         "block": run.plan.g.name, "k": kk,
-                                         "round": self.rounds})
-                packed.append((key, lanes, metas))
-            # all of the step's dispatches are resident on device at once
-            # (they launch before any sync), so a pool budget must be
-            # split across them, not granted per dispatch
-            n_dispatch = sum(-(-len(lanes) // L) for _k, lanes, _m in packed)
+                                         "block": run.plan.g.name,
+                                         "k": kk, "round": self.rounds})
+                # every dispatch resident before any sync — including the
+                # pipelined rounds still in flight — splits the budget
+                n_dispatch = sum(len(hs) for _no, hs, _t in self._rounds)
+                n_dispatch += sum(-(-len(lanes) // L)
+                                  for lanes, _m in groups.values())
 
-            for key, lanes, metas in packed:
-                kw = dict(key)
-                cap = kw.pop("cap")
-                if cap is None:
-                    cap = self.cap
-                if cap is None:
-                    cap = self._plan_group_cap(key, lanes, n_dispatch)
-                # chunk a speculation-widened group into pool-sized
-                # dispatches (lane axis padded to the full pool so the
-                # steady state reuses one compiled program per group)
-                for lo in range(0, len(lanes), L):
-                    handle = batch.decide_lanes_async(
-                        lanes[lo:lo + L], cap=cap, n_pad=self._n_pad,
-                        lane_pad=L, **kw)
-                    self._inflight.append((handle, metas[lo:lo + L]))
-            return True
+                handles = []
+                for key, (lanes, metas) in groups.items():
+                    kw = dict(key)
+                    cap = kw.pop("cap")
+                    if cap is None:
+                        cap = self.cap
+                    if cap is None:
+                        cap = self._plan_group_cap(key, lanes, n_dispatch)
+                    # chunk a speculation-widened group into pool-sized
+                    # dispatches (lane axis padded to the full pool so
+                    # the steady state reuses one compiled program)
+                    for lo in range(0, len(lanes), L):
+                        handle = batch.decide_lanes_async(
+                            lanes[lo:lo + L], cap=cap, n_pad=self._n_pad,
+                            lane_pad=L, **kw)
+                        handles.append((handle, metas[lo:lo + L]))
+                self._rounds.append((self.rounds, handles,
+                                     time.monotonic()))
+        self._flush_events()
+        return launched
 
     def _plan_group_cap(self, key: tuple, lanes: list,
                         n_dispatch: int = 1) -> int:
@@ -450,72 +676,115 @@ class TwScheduler:
         the next ``launch()``."""
         with self._lock:
             self.pool.admit(self._start)
+        self._flush_events()
 
-    def sync(self) -> None:
-        """Block for the in-flight verdicts (the only host syncs of the
-        step), feed them through each request's ``InstanceState`` in rung
-        order, emit ``rung_decided`` events, and recycle finished slots.
-        The device wait runs outside the scheduler lock so submissions
-        and ``status`` calls keep landing mid-flight."""
-        inflight, finished = self._inflight, set()
-        self._inflight = []
-        for handle, metas in inflight:
+    def sync(self) -> bool:
+        """Block for the *oldest* in-flight round's verdicts, feed them
+        through each request's ``InstanceState`` in rung order, emit
+        ``rung_decided`` events, recycle finished slots, and run the
+        deadline sweep.  Verdicts for a cancelled rid, or for a rung of
+        a block that already decided (pipelining/speculation overshoot),
+        are discarded uncounted — the sequential ladder never ran them.
+        The device wait runs outside the scheduler lock so submissions,
+        ``status`` and ``cancel`` calls keep landing mid-flight.
+        Returns False when nothing was in flight."""
+        with self._lock:
+            if not self._rounds:
+                return False
+            no, parts, t_launch = self._rounds.pop(0)
+        for handle, metas in parts:
             results = handle.result()          # device wait — no lock held
             with self._lock:
-                for (i, req, inst, k, name), res in zip(metas, results):
-                    if req.rid in finished:
-                        continue   # block decided on an earlier rung this
-                        # round: the sequential ladder never ran this one —
-                        # discard it uncounted (speculation semantics, §8)
-                    cont = inst.feed(k, res)
+                for (i, req, inst, run, k, name), res in zip(metas,
+                                                             results):
+                    if req.rid in self._discard or inst.run is not run:
+                        # cancelled, deadline-preempted, or the block
+                        # decided on an earlier rung: the sequential
+                        # ladder never ran this one — discard it
+                        # uncounted (speculation semantics, §8)
+                        continue
+                    inst.feed(k, res)
                     self._emit(req, dict(
                         self._bounds_event(req, inst),
                         event="rung_decided", block=name, k=k,
-                        round=self.rounds, feasible=res.feasible,
+                        round=no, feasible=res.feasible,
                         inexact=res.inexact, expanded=res.expanded))
-                    if not cont:
-                        finished.add(req.rid)
                     if inst.result is not None:
                         self._finish(req, inst)
                         self.pool.release(i)
-
-    def step(self) -> bool:
-        """One overlapped scheduler step: launch the shared dispatches,
-        run admission/planning for new arrivals while the device works,
-        then sync the verdicts and recycle slots."""
-        if not self.launch():
-            return False
-        self.poll_admissions()
-        self.sync()
+                        self._cursor.pop(req.rid, None)
+        with self._lock:
+            self._expire_deadlines()
+            dt = time.monotonic() - t_launch
+            self._round_s = dt if self._round_s is None else \
+                0.7 * self._round_s + 0.3 * dt
+            if self._rounds:
+                self.covered_syncs += 1    # the device already has work
+            else:
+                self.idle_syncs += 1       # host-sync gap: device idles
+                self._discard.clear()      # nothing in flight references
+        self._flush_events()
         return True
 
-    def recover(self) -> None:
-        """Best-effort cleanup after a raised ``step()`` — a persistent
-        driver must keep driving.  Tries to sync whatever did launch
-        (their verdicts are still valid and feed normally); if even that
-        fails, drops the in-flight handles so the next ``launch()`` can
-        proceed (the affected rungs re-pack from unchanged host state —
-        ``InstanceState`` only advances in ``feed``, so nothing is lost
-        or double-counted)."""
-        try:
+    def step(self) -> bool:
+        """One overlapped scheduler step: launch the next round's shared
+        dispatches, run admission/planning for new arrivals while the
+        device works, then — once the pipeline is full (or nothing new
+        launched) — sync the oldest round's verdicts and recycle slots.
+        With ``pipeline=1`` this is exactly launch → poll → sync; deeper
+        pipelines keep ``pipeline`` rounds in flight so the device stays
+        busy across each host sync."""
+        launched = False
+        if len(self._rounds) < self.pipeline:
+            launched = self.launch()
+        self.poll_admissions()
+        if self._rounds and (len(self._rounds) >= self.pipeline
+                             or not launched):
             self.sync()
-        except Exception:                     # noqa: BLE001 — last resort
-            with self._lock:
-                self._inflight = []
+            return True
+        return launched
+
+    def recover(self) -> None:
+        """Cleanup after a raised ``step()`` — a persistent driver must
+        keep driving.  Discards every in-flight round *and resets the
+        pipeline cursors*: a failed ``sync`` already lost its round's
+        verdicts, so feeding any younger pipelined round (or launching
+        from a cursor past the lost rungs) would leave a gap in the
+        deepening ladder and break parity.  The next ``launch()``
+        re-packs each lane from its unchanged host state
+        (``InstanceState`` only advances in ``feed``, so nothing is lost
+        or double-counted — the discarded rungs simply re-run)."""
+        with self._lock:
+            for _no, handles, _t in self._rounds:
+                for handle, _metas in handles:
+                    if handle is not None:
+                        handle.discard()
+            self._rounds = []
+            self._cursor.clear()
+        self._flush_events()
 
     def run(self, max_rounds: int = 1_000_000) -> Dict[int, object]:
-        """Drain the queue; returns {rid: solver.SolveResult}."""
+        """Drain the queue (and the pipeline); returns
+        {rid: solver.SolveResult} for completed and deadline-resolved
+        requests (cancelled/errored rids carry no result — see
+        ``terminal``/``errors``)."""
         rounds = 0
-        while self.pool.busy and rounds < max_rounds:
+        while (self.pool.busy or self.in_flight) and rounds < max_rounds:
             if not self.step():
                 break
             rounds += 1
+        self._flush_events()
         return self.done
 
     @property
     def in_flight(self) -> bool:
         """Is a launched dispatch awaiting ``sync()``?"""
-        return bool(self._inflight)
+        return bool(self._rounds)
+
+    @property
+    def inflight_dispatches(self) -> int:
+        """Dispatches currently resident on device across the pipeline."""
+        return sum(len(handles) for _no, handles, _t in self._rounds)
 
     def pool_bytes(self) -> int:
         """Resident frontier-pool footprint of the largest dispatch issued

@@ -210,7 +210,7 @@ def test_budget_splits_across_a_steps_concurrent_dispatches():
     r0 = sched.submit(graph.petersen())
     r1 = sched.submit(graph.myciel(3), use_mmw=True)   # second group
     assert sched.launch()
-    assert len(sched._inflight) == 2     # one dispatch per config group
+    assert sched.inflight_dispatches == 2   # one dispatch per config group
     w = bitset.n_words(sched._n_pad)
     resident = sum(cap * 2 * w * 4 for cap in sched._cap_pad.values())
     assert resident <= budget
@@ -232,8 +232,9 @@ def test_recover_after_failed_step_keeps_serving():
     rid = sched.submit(graph.petersen())
     assert sched.launch()
     # simulate a sync-side failure: poison the handle, then recover
-    handle, metas = sched._inflight[0]
-    sched._inflight[0] = (None, metas)          # .result() -> AttributeError
+    no, handles, t0 = sched._rounds[0]
+    handle, metas = handles[0]
+    handles[0] = (None, metas)                  # .result() -> AttributeError
     with pytest.raises(AttributeError):
         sched.sync()
     sched.recover()

@@ -127,3 +127,147 @@ def test_shutdown_drains_and_exits():
     assert not srv._driver.is_alive()
     assert rid in srv.sched.done        # admitted work drained before exit
     srv.close()
+
+
+# --------------------------------------------- traffic shaping over the wire
+
+def test_cancel_over_the_wire(server):
+    c = TwClient(port=server.port)
+    rid = c.submit("queen6_6")
+    assert c.cancel(rid) is True
+    assert c.cancel(rid) is False                  # idempotent
+    evs = list(c.stream(rid))
+    assert evs[-1]["event"] == "cancelled"
+    with pytest.raises(TwServerError, match="cancelled"):
+        c.result(rid)
+    assert c.status(rid)["state"] == "cancelled"
+    other = c.submit("petersen")                   # pool keeps serving
+    ref = solver.solve(graph.petersen(), cap=1 << 12, block=BLOCK)
+    assert c.result(other)["width"] == ref.width
+
+
+def test_deadline_and_priority_knobs_ride_the_submit_line(server):
+    c = TwClient(port=server.port)
+    # an unhit deadline and a priority class change nothing about the result
+    rid = c.submit("petersen", priority=1, deadline_s=3600.0)
+    res = c.result(rid)
+    ref = solver.solve(graph.petersen(), cap=1 << 12, block=BLOCK)
+    assert (res["width"], res["exact"], res["expanded"]) == \
+        (ref.width, ref.exact, ref.expanded)
+    assert "timed_out" not in res
+    # an already-expired deadline resolves with anytime bounds, flagged
+    rid2 = c.submit("queen5_5", deadline_s=0.0)
+    res2 = c.result(rid2)
+    assert res2["timed_out"] is True and res2["exact"] is False
+    assert res2["lb"] <= res2["ub"] == res2["width"]
+    evs = list(c.stream(rid2))
+    assert evs[-1]["event"] == "done" and evs[-1]["timed_out"] is True
+
+
+def test_backpressure_rejects_with_retry_after():
+    """With the driver not yet running, submits pile into the admission
+    queue; past --max-queue the server sheds them with a retry_after
+    hint instead of queuing unboundedly."""
+    import threading
+
+    srv = TwServer(port=0, max_queue=1, **POOL)
+    acceptor = threading.Thread(target=srv._tcp.serve_forever, daemon=True)
+    acceptor.start()                 # acceptor only: nothing drains the queue
+    try:
+        c = TwClient(port=srv.port)
+        c.submit("petersen")         # fills the bounded queue
+        with pytest.raises(TwServerError, match="queue full") as ei:
+            c.submit("myciel3")
+        assert ei.value.retry_after is not None and ei.value.retry_after > 0
+        # raw wire shape: ok false + error + retry_after
+        with socket.create_connection(("127.0.0.1", srv.port)) as s:
+            s.sendall(b'{"op": "submit", "graph": "myciel3"}\n')
+            resp = json.loads(s.makefile("r").readline())
+        assert resp["ok"] is False and resp["retry_after"] > 0
+    finally:
+        srv._tcp.shutdown()
+        srv._tcp.server_close()
+
+
+def test_server_never_passes_rids_so_they_never_collide(server):
+    c = TwClient(port=server.port)
+    rids = [c.submit("myciel3") for _ in range(3)]
+    assert rids == sorted(set(rids))               # fresh, strictly increasing
+
+
+def test_eviction_skips_logs_with_blocked_readers():
+    """A ``result`` reader blocked on a still-running rid must receive the
+    finished result even when eviction pressure passes keep_results while
+    it waits (the log is registered busy, so _evict skips it)."""
+    import threading
+
+    srv = TwServer(port=0, keep_results=1, **POOL)
+    srv.start()
+    try:
+        c = TwClient(port=srv.port)
+        slow = c.submit("queen6_6")
+        got = {}
+
+        def read_result():
+            got["res"] = c.result(slow)
+
+        t = threading.Thread(target=read_result)
+        t.start()                    # blocks in iter_events on the slow rid
+        for _ in range(3):           # eviction pressure while it waits
+            c.result(c.submit("myciel3"))
+        t.join(timeout=120)
+        assert not t.is_alive()
+        ref = solver.solve(graph.queen(6), cap=1 << 12, block=BLOCK)
+        assert (got["res"]["width"], got["res"]["exact"]) == \
+            (ref.width, ref.exact)
+    finally:
+        srv.close()
+
+
+def test_evict_unit_semantics_unclosed_and_busy_logs_survive():
+    """White-box pin of the eviction rules: only terminal rids whose logs
+    are closed and reader-free are dropped."""
+    from repro.launch.twserved import _EventLog
+
+    srv = TwServer(port=0, keep_results=1, **POOL)   # driver not started
+    try:
+        sched = srv.sched
+        for rid, state in ((0, "done"), (1, "done"), (2, "done")):
+            sched.terminal[rid] = state
+            sched.done[rid] = object()
+            log = _EventLog()
+            log.push({"event": "done"})              # closed
+            srv._logs[rid] = log
+        srv._logs[1].acquire()                       # a blocked reader
+        srv._logs[2].closed = False                  # terminal not delivered
+        srv._evict()
+        assert 0 not in sched.done                   # evictable: dropped
+        assert 1 in sched.done and 2 in sched.done   # busy/unclosed: kept
+    finally:
+        srv._tcp.server_close()
+
+
+def test_wire_responses_coerce_numpy_payloads():
+    """A result carrying numpy/jax scalars or arrays (order, per_k) must
+    serialize instead of dying in json.dumps."""
+    import dataclasses
+
+    import numpy as np
+
+    srv = TwServer(port=0, **POOL)
+    srv.start()
+    try:
+        c = TwClient(port=srv.port)
+        rid = c.submit("petersen")
+        res = c.result(rid)                          # finished and logged
+        poisoned = dataclasses.replace(
+            srv.sched.done[rid], width=np.int64(res["width"]),
+            order=np.array([3, 1, 2]),
+            per_k={"g": {"expanded": np.int32(7)}})
+        srv.sched.done[rid] = poisoned
+        res2 = c.result(rid)
+        assert res2["width"] == res["width"]
+        assert res2["order"] == [3, 1, 2]
+        assert res2["per_k"]["g"]["expanded"] == 7
+    finally:
+        srv.close()
