@@ -1,5 +1,5 @@
 """Host-sync microbench: engine (host vs fused) x backend (jax vs pallas)
-x lanes (sequential vs speculative deepening).
+x lanes (sequential vs speculative deepening) x shards (scale-out).
 
 The paper's §3 design point is that the Held-Karp frontier never leaves the
 GPU; the cost of not doing that is kernel-dispatch serialisation.  This
@@ -13,9 +13,14 @@ jax reference composition from day one (ISSUE 2).  The lanes column
 (ISSUE 3) runs the fused engine through speculative deepening
 (``solver.solve(lanes=4)`` -> ``core.batch``): one multi-lane dispatch
 per ladder window instead of one per k; ``benchmarks/batch_throughput.py``
-covers the cross-instance ``solve_many`` axis.  On CPU the pallas rows
-run in interpret mode, so their absolute times measure the interpreter,
-not the kernel — the dispatch/sync counts and the bit-for-bit width/
+covers the cross-instance ``solve_many`` axis.  The shards column
+(ISSUE 7) runs the fused engine through intra-request scale-out
+(``solver.solve(shards=2)`` -> ``core.shard``): the frontier split
+across vmapped shard lanes with work donation — the shard-health
+counters (donations, donated rows, idle shard-steps, peak occupancy)
+land in the same ``COUNTERS`` table.  On CPU the pallas rows run in
+interpret mode, so their absolute times measure the interpreter, not
+the kernel — the dispatch/sync counts and the bit-for-bit width/
 expanded parity asserts are what carry; wall-clock becomes meaningful on
 real TPU hardware.
 
@@ -33,13 +38,19 @@ from .common import SUITE_FAST, SUITE_FULL, Timer, emit, get_instance
 
 SUITE_QUICK = [("myciel3", 5), ("petersen", 4), ("desargues", 6)]
 
-# (backend, engine, lanes) rows per instance; host/pallas adds nothing the
-# others don't already cover (host-loop overhead is backend-independent).
-# The lanes=4 row runs the same fused engine through the multi-lane
-# speculative-deepening path (core.batch) — the batch column of the
-# dispatch/sync accounting; its results must stay bit-identical.
-COMBOS = [("jax", "host", 1), ("jax", "fused", 1), ("jax", "fused", 4),
-          ("pallas", "fused", 1)]
+# (backend, engine, lanes, shards) rows per instance; host/pallas adds
+# nothing the others don't already cover (host-loop overhead is
+# backend-independent).  The lanes=4 row runs the same fused engine
+# through the multi-lane speculative-deepening path (core.batch); the
+# shards=2 row through the sharded scale-out path (core.shard) — both
+# extra columns of the dispatch/sync accounting, and both must stay
+# bit-identical to the sequential fused row.
+COMBOS = [("jax", "host", 1, 1), ("jax", "fused", 1, 1),
+          ("jax", "fused", 4, 1), ("jax", "fused", 1, 2),
+          ("pallas", "fused", 1, 1)]
+
+SHARD_KEYS = ("shard_donations", "shard_donated_rows",
+              "shard_idle_steps", "shard_peak_occupancy")
 
 
 def run(full: bool = False, quick: bool = False, pallas: bool = True,
@@ -48,41 +59,44 @@ def run(full: bool = False, quick: bool = False, pallas: bool = True,
     combos = [c for c in COMBOS if pallas or c[0] != "pallas"]
     rows = []
     header = (f"{'instance':<12} {'backend':<7} {'engine':<6} {'lanes':>5} "
-              f"{'tw':>3} {'time_s':>8} {'dispatches':>10} "
+              f"{'shards':>6} {'tw':>3} {'time_s':>8} {'dispatches':>10} "
               f"{'host_syncs':>10}")
     print(header, flush=True)
     for key, want in suite:
         g = get_instance(key)
         per_combo = {}
-        for backend, engine, lanes in combos:
+        for backend, engine, lanes, shards in combos:
             engine_lib.reset_counters()
             with Timer() as t:
                 res = solver.solve(g, cap=cap, block=block, engine=engine,
                                    backend=backend, schedule="doubling",
-                                   lanes=lanes)
+                                   lanes=lanes, shards=shards)
             c = dict(engine_lib.COUNTERS)
             ok = (want is None) or (res.width == want)
-            per_combo[(backend, engine, lanes)] = (res, c, t.seconds, ok)
-            rows.append((key, backend, engine, lanes, res.width, t.seconds,
-                         c["dispatches"], c["host_syncs"], ok))
+            per_combo[(backend, engine, lanes, shards)] = \
+                (res, c, t.seconds, ok)
+            rows.append((key, backend, engine, lanes, shards, res.width,
+                         t.seconds, c["dispatches"], c["host_syncs"], ok))
             print(f"{key:<12} {backend:<7} {engine:<6} {lanes:>5} "
-                  f"{res.width:>3} {t.seconds:>8.2f} "
+                  f"{shards:>6} {res.width:>3} {t.seconds:>8.2f} "
                   f"{c['dispatches']:>10} {c['host_syncs']:>10}",
                   flush=True)
-            emit(f"engine_sync/{key}/{backend}/{engine}/lanes{lanes}",
+            emit(f"engine_sync/{key}/{backend}/{engine}/lanes{lanes}"
+                 f"/shards{shards}",
                  t.seconds,
                  f"tw={res.width};dispatches={c['dispatches']};"
                  f"host_syncs={c['host_syncs']};expected_ok={ok}")
         # parity across every combo: same width, same states expanded
-        # (speculative lanes discard rungs above the first feasible one,
-        # so even the lanes=4 row must match exactly)
+        # (speculative lanes discard rungs above the first feasible one
+        # and shards repartition without re-expanding, so even the
+        # lanes=4 and shards=2 rows must match exactly)
         base, *rest = [per_combo[c][0] for c in combos]
         for r in rest:
             assert r.width == base.width, (key, r.width, base.width)
             assert r.expanded == base.expanded, \
                 (key, r.expanded, base.expanded)
-        (rh, ch, th, _) = per_combo[("jax", "host", 1)]
-        (rf, cf, tf, _) = per_combo[("jax", "fused", 1)]
+        (rh, ch, th, _) = per_combo[("jax", "host", 1, 1)]
+        (rf, cf, tf, _) = per_combo[("jax", "fused", 1, 1)]
         speedup = th / max(tf, 1e-9)
         sync_ratio = ch["host_syncs"] / max(cf["host_syncs"], 1)
         emit(f"engine_sync/{key}/summary", tf,
@@ -90,12 +104,22 @@ def run(full: bool = False, quick: bool = False, pallas: bool = True,
         print(f"{key:<12} -> fused speedup {speedup:.2f}x, "
               f"{ch['host_syncs']} -> {cf['host_syncs']} syncs "
               f"({sync_ratio:.0f}x fewer)", flush=True)
-        (rb, cb, tb, _) = per_combo[("jax", "fused", 4)]
+        (rb, cb, tb, _) = per_combo[("jax", "fused", 4, 1)]
         emit(f"engine_sync/{key}/batch_summary", tb,
              f"fused_dispatches={cf['dispatches']};"
              f"lanes4_dispatches={cb['dispatches']};parity=exact")
-        if ("pallas", "fused", 1) in per_combo:
-            (rp, cp, tp, _) = per_combo[("pallas", "fused", 1)]
+        (rs, cs, ts, _) = per_combo[("jax", "fused", 1, 2)]
+        shard_health = ";".join(f"{k}={cs[k]}" for k in SHARD_KEYS)
+        emit(f"engine_sync/{key}/shard_summary", ts,
+             f"seq_s={tf:.3f};shards2_s={ts:.3f};{shard_health};"
+             f"parity=exact")
+        print(f"{key:<12} -> shards=2: "
+              f"{cs['shard_donations']} donations "
+              f"({cs['shard_donated_rows']} rows), "
+              f"{cs['shard_idle_steps']} idle shard-steps, "
+              f"peak occupancy {cs['shard_peak_occupancy']}", flush=True)
+        if ("pallas", "fused", 1, 1) in per_combo:
+            (rp, cp, tp, _) = per_combo[("pallas", "fused", 1, 1)]
             emit(f"engine_sync/{key}/backend_summary", tp,
                  f"jax_fused_s={tf:.3f};pallas_fused_s={tp:.3f};"
                  f"parity=exact")

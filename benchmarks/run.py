@@ -35,6 +35,11 @@ def main() -> None:
     serve_throughput.run(full=full, quick=not full,
                          lanes=8 if full else 4)
 
+    print("# shard_scaling: intra-request scale-out (sharded frontier "
+          "vs sequential)", flush=True)
+    from . import shard_scaling
+    shard_scaling.run(full=full, quick=not full)
+
     print("# table2: work-size x memory sweep (paper Tables 2/3)",
           flush=True)
     from . import table2_worksize

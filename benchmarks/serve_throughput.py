@@ -22,6 +22,13 @@ pushes a mixed Table-1 instance stream through
     each host sync finds the device already covered by queued work
     (``covered_syncs`` vs ``idle_syncs``) — parity asserted against
     depth 1 and the sequential baseline
+  * ``shards=S``   — ISSUE 7's intra-request scale-out: one heavy
+    request submitted with ``shards=4`` (its rungs decided by 4-way
+    sharded dispatches with work donation, its ladder climbing 4 rungs
+    per round from its 4-slot entitlement) finishes in measurably fewer
+    scheduler rounds than the same request with ``shards=1``, while the
+    concurrent small requests keep completing — parity asserted for
+    every request in both runs
 
 and reports requests/sec, dispatch/host-sync/round counts and the pooled
 frontier footprint, asserting full result parity (width/exactness/
@@ -104,7 +111,7 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
              f"req_s={len(gs) / max(secs, 1e-9):.2f};"
              f"dispatches={c['dispatches']};host_syncs={c['host_syncs']};"
              f"pool_bytes={pool}")
-        records.append(dict(mode=mode, wall_s=secs,
+        records.append(dict(mode=mode, shards=1, wall_s=secs,
                             req_s=len(gs) / max(secs, 1e-9),
                             dispatches=c["dispatches"],
                             host_syncs=c["host_syncs"], pool_bytes=pool))
@@ -129,6 +136,7 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
 
     records.append(run_overlap(keys, gs, seq, lanes=lanes, block=block))
     records.extend(run_pipeline(keys, gs, seq, lanes=lanes, block=block))
+    records.extend(run_shards(lanes=lanes, block=block, quick=quick))
 
     if json_path:
         import json as json_lib
@@ -216,7 +224,7 @@ def run_overlap(keys, gs, seq, *, lanes: int, block: int):
          f"rounds={overlap.rounds};blocking_rounds={blocking.rounds};"
          f"late_admit_rounds={'+'.join(map(str, late_adm))};"
          f"dispatches={c['dispatches']}")
-    return dict(mode=mode, wall_s=t_async.seconds,
+    return dict(mode=mode, shards=1, wall_s=t_async.seconds,
                 req_s=len(gs) / max(t_async.seconds, 1e-9),
                 dispatches=c["dispatches"], host_syncs=c["host_syncs"],
                 rounds=overlap.rounds, blocking_rounds=blocking.rounds,
@@ -253,7 +261,7 @@ def run_pipeline(keys, gs, seq, *, lanes: int, block: int):
              f"rounds={sched.rounds};idle_syncs={sched.idle_syncs};"
              f"covered_syncs={sched.covered_syncs}")
         stats[depth] = (sched.idle_syncs, sched.covered_syncs)
-        records.append(dict(mode=mode, wall_s=t.seconds,
+        records.append(dict(mode=mode, shards=1, wall_s=t.seconds,
                             req_s=len(gs) / max(t.seconds, 1e-9),
                             dispatches=c["dispatches"],
                             host_syncs=c["host_syncs"],
@@ -267,6 +275,71 @@ def run_pipeline(keys, gs, seq, *, lanes: int, block: int):
     assert stats[2][1] > 0, "depth 2 must cover syncs with queued rounds"
     assert stats[2][0] < stats[1][0], \
         "depth 2 must show fewer idle host-sync gaps than depth 1"
+    return records
+
+
+def run_shards(*, lanes: int, block: int, quick: bool = False):
+    """ISSUE 7's acceptance evidence: one heavy request submitted with
+    ``shards=4`` — its rungs decided by 4-way sharded dispatches
+    (``core.shard``: owner-hash frontier split + work donation) and its
+    ladder climbing 4 rungs per round from its 4-slot entitlement —
+    finishes in measurably fewer scheduler rounds than the identical
+    request with ``shards=1``, while the concurrent small requests keep
+    completing.  Every request's result is asserted bit-identical to
+    sequential ``solver.solve`` in both runs."""
+    heavy_key = "myciel4" if quick else "queen5_5"
+    heavy = get_instance(heavy_key)
+    small_keys = ["myciel3", "petersen", "myciel3"]
+    smalls = [get_instance(k) for k in small_keys]
+    ref_h = solver.solve(heavy, block=block)
+    ref_s = [solver.solve(g, block=block) for g in smalls]
+
+    records, done_rounds = [], {}
+    for s in (1, 4):
+        engine_lib.reset_counters()
+        sched = TwScheduler(lanes=lanes, block=block)
+        evs = []
+        with Timer() as t:
+            rid_h = sched.submit(heavy, shards=s, on_event=evs.append)
+            rids = [sched.submit(g) for g in smalls]
+            done = sched.run()
+        c = dict(engine_lib.COUNTERS)
+        done_rounds[s] = next(e["rounds"] for e in evs
+                              if e["event"] == "done")
+        rh = done[rid_h]
+        assert (rh.width, rh.exact, rh.expanded, rh.per_k) == \
+            (ref_h.width, ref_h.exact, ref_h.expanded, ref_h.per_k), \
+            (heavy_key, s, rh, ref_h)
+        for key, rid, ref in zip(small_keys, rids, ref_s):
+            res = done[rid]
+            assert (res.width, res.exact, res.expanded) == \
+                (ref.width, ref.exact, ref.expanded), (key, s, res, ref)
+        mode = f"shards={s}"
+        print(f"{mode:<14} {t.seconds:>8.2f} "
+              f"{(1 + len(smalls)) / max(t.seconds, 1e-9):>8.2f} "
+              f"{c['dispatches']:>10} {c['host_syncs']:>10} "
+              f"{sched.pool_bytes() / 2**20:>9.2f}", flush=True)
+        emit(f"serve_throughput/{mode}", t.seconds,
+             f"heavy={heavy_key};heavy_done_round={done_rounds[s]};"
+             f"rounds={sched.rounds};dispatches={c['dispatches']};"
+             f"donations={c['shard_donations']};"
+             f"donated_rows={c['shard_donated_rows']};"
+             f"idle_steps={c['shard_idle_steps']};"
+             f"peak_occupancy={c['shard_peak_occupancy']}")
+        records.append(dict(
+            mode=mode, shards=s, wall_s=t.seconds, heavy=heavy_key,
+            heavy_done_round=done_rounds[s], rounds=sched.rounds,
+            dispatches=c["dispatches"], host_syncs=c["host_syncs"],
+            shard_donations=c["shard_donations"],
+            shard_donated_rows=c["shard_donated_rows"],
+            shard_idle_steps=c["shard_idle_steps"],
+            shard_peak_occupancy=c["shard_peak_occupancy"],
+            pool_bytes=sched.pool_bytes()))
+    print(f"-> shards: heavy ({heavy_key}) done at round "
+          f"{done_rounds[4]} sharded vs {done_rounds[1]} unsharded; "
+          f"smalls completed in both runs", flush=True)
+    assert done_rounds[4] < done_rounds[1], \
+        "sharded heavy request must finish in fewer scheduler rounds"
     return records
 
 

@@ -135,14 +135,17 @@ def device_memory_budget(fraction: float = 0.5) -> Optional[int]:
 def validate(backend: str, *, mode: str = "sort",
              schedule: str = "doubling", use_mmw: bool = False,
              use_simplicial: bool = False,
-             m_bits: Optional[int] = None, lanes: int = 1) -> None:
+             m_bits: Optional[int] = None, lanes: int = 1,
+             shards: int = 1) -> None:
     """Fail fast on solver configurations the backend cannot run.
 
     Called at every entry point (``solver.decide``, ``engine.fused_decide``,
     ``distributed.decide_distributed``, ``batch.decide_lanes``, the CLI) so
     an unsupported combo surfaces as one actionable error before any
-    tracing starts.  ``lanes > 1`` additionally requires the backend's ops
-    to be vmap-safe (``BATCHED_BACKENDS``).
+    tracing starts.  ``lanes > 1`` and ``shards > 1`` additionally require
+    the backend's ops to be vmap-safe (``BATCHED_BACKENDS``) — the
+    multi-lane engine vmaps whole decide loops, the sharded engine
+    (``core.shard``) vmaps the per-shard expand/dedup pipeline.
     """
     if backend not in BACKENDS:
         raise BackendCapabilityError(
@@ -156,6 +159,14 @@ def validate(backend: str, *, mode: str = "sort",
             f"backend {backend!r} does not support the multi-lane engine "
             f"(batched backends: {', '.join(BATCHED_BACKENDS)}); run with "
             "lanes=1 or switch backend.")
+    if shards < 1:
+        raise BackendCapabilityError(
+            f"shards must be >= 1 (got {shards})")
+    if shards > 1 and backend not in BATCHED_BACKENDS:
+        raise BackendCapabilityError(
+            f"backend {backend!r} does not support the sharded engine "
+            f"(batched backends: {', '.join(BATCHED_BACKENDS)}); run with "
+            "shards=1 or switch backend.")
     if mode not in DEDUP_MODES:
         raise BackendCapabilityError(
             f"unknown dedup mode {mode!r}; known modes: "

@@ -41,9 +41,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.utils import compat
 
 from . import backend as backend_lib
-from . import bitset, bloom, bounds, dedup
+from . import bitset, bounds, dedup
 from . import engine as engine_lib
 from . import preprocess as preprocess_lib
+from . import shard as shard_lib
 from .graph import Graph
 from .solver import SolveResult
 
@@ -78,36 +79,78 @@ def _local_expand(adj, states, count, k, allowed, *, n, cap_local, block,
 
 def _build_buckets(rows, count, ndev, cap_send, w):
     """Group valid rows by owner device -> (send (ndev, cap_send, W),
-    send_counts (ndev,), dropped)."""
-    capl = rows.shape[0]
-    valid = jnp.arange(capl, dtype=jnp.int32) < count
-    owner = (bloom.murmur3_words(rows, bloom.SEED1) % np.uint32(ndev)) \
+    send_counts (ndev,), dropped).  Thin prefix-count adapter over the
+    shared ownership router in ``core.shard`` (same hash, same sort/scatter
+    on a single device's shards and on the mesh)."""
+    del w
+    valid = jnp.arange(rows.shape[0], dtype=jnp.int32) < count
+    return shard_lib.route_states(rows, valid, ndev, cap_send)
+
+
+def _donate(buf, cnt, counts_all, me, *, ndev, cap_local, cap_send, w,
+            axes, donate_ratio):
+    """Mesh work donation: rebalance post-dedup rows across devices.
+
+    Every device computes the identical water-filling plan from the
+    all-gathered counts (``shard.donation_plan``), so the transfer matrix
+    ``T[d, e]`` needs no negotiation: device d sends its surplus rows
+    (beyond its keep target) in contiguous runs to the deficit devices via
+    a second ``all_to_all``, and reads its own receive counts from
+    ``T[:, me]`` locally.  Per-edge transfers are clamped to ``cap_send``
+    (partial donation; the remainder simply stays at the donor), so no
+    state is ever dropped by a donation.  Returns
+    (buf, cnt, stats (4,) [triggered, rows_moved, idle, peak]) with stats
+    identical on every device (pure functions of ``counts_all``).
+    """
+    targets, trig, _moved = shard_lib.donation_plan(counts_all, donate_ratio)
+    give = jnp.maximum(counts_all - targets, 0)
+    take = jnp.maximum(targets - counts_all, 0)
+    zero1 = jnp.zeros((1,), jnp.int32)
+    gg = jnp.concatenate([zero1, jnp.cumsum(give).astype(jnp.int32)])
+    gt = jnp.concatenate([zero1, jnp.cumsum(take).astype(jnp.int32)])
+    t_mat = jnp.maximum(
+        0, jnp.minimum(gg[1:, None], gt[None, 1:])
+        - jnp.maximum(gg[:-1, None], gt[None, :-1]))
+    t_mat = jnp.where(trig, jnp.minimum(t_mat, cap_send), 0) \
         .astype(jnp.int32)
-    owner = jnp.where(valid, owner, ndev)          # invalid rows sort last
-    cols = (owner,) + tuple(rows[:, j] for j in range(w))
-    srt = jax.lax.sort(cols, dimension=0, num_keys=1 + w)
-    owner_s = srt[0]
-    rows_s = jnp.stack(srt[1:], axis=1)
-    counts = jnp.bincount(owner, length=ndev + 1)[:ndev].astype(jnp.int32)
-    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
-    idx = jnp.arange(capl, dtype=jnp.int32)
-    safe_owner = jnp.minimum(owner_s, ndev - 1)
-    pos = idx - starts[safe_owner]
-    ok = (owner_s < ndev) & (pos < cap_send)
-    dest = jnp.where(ok, safe_owner * cap_send + pos, ndev * cap_send)
-    send = jnp.zeros((ndev * cap_send, w), dtype=U32)
-    send = send.at[dest].set(rows_s, mode="drop")
-    send_counts = jnp.minimum(counts, cap_send)
-    dropped = jnp.sum(counts - send_counts)
-    return send.reshape(ndev, cap_send, w), send_counts, dropped
+
+    row_t = t_mat[me]                         # rows I send to each device
+    keep = cnt - jnp.sum(row_t)
+    off = jnp.concatenate([zero1, jnp.cumsum(row_t).astype(jnp.int32)])
+    flat = jnp.arange(ndev * cap_send, dtype=jnp.int32)
+    eidx, j = flat // cap_send, flat % cap_send
+    src = keep + off[eidx] + j
+    sval = j < row_t[eidx]
+    send = jnp.where(sval[:, None],
+                     buf[jnp.clip(src, 0, cap_local - 1)], 0).astype(U32)
+    recv = jax.lax.all_to_all(send.reshape(ndev, cap_send, w), axes,
+                              split_axis=0, concat_axis=0, tiled=False)
+    rcnt = t_mat[:, me]                       # rows I receive, known locally
+    rrows = recv.reshape(ndev * cap_send, w)
+    rval = j < rcnt[eidx]
+    mask_keep = jnp.arange(cap_local, dtype=jnp.int32) < keep
+    buf = jnp.where(mask_keep[:, None], buf, 0)
+    pos = keep + jnp.cumsum(rval.astype(jnp.int32)) - 1
+    dest = jnp.where(rval, pos, cap_local)
+    buf = buf.at[dest].set(rrows, mode="drop")
+    cnt = keep + jnp.sum(rcnt)
+
+    stats = jnp.stack([trig.astype(jnp.int32), jnp.sum(t_mat),
+                       jnp.sum((counts_all == 0).astype(jnp.int32)),
+                       jnp.max(counts_all)])
+    return buf, cnt, stats
 
 
 def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
-                         use_mmw, use_simplicial, schedule, backend):
+                         use_mmw, use_simplicial, schedule, backend,
+                         donate_ratio=None):
     """The per-level SPMD program: local expand -> ownership all_to_all ->
-    owner dedup.  Returned un-jitted so it can be embedded either in a
-    host-driven per-level jit or inside the fused while_loop."""
+    owner dedup -> (threshold donation).  Returned un-jitted so it can be
+    embedded either in a host-driven per-level jit or inside the fused
+    while_loop.  Outputs (states, counts, dropped, stats) with ``stats``
+    the replicated shard-health vector of ``shard.sharded_decide_loop``
+    (zeros when donation is disabled — the plan needs the same all_gather
+    the stats do)."""
     ndev = mesh.devices.size
     axes = tuple(mesh.axis_names)
 
@@ -129,35 +172,47 @@ def _make_level_shardmap(mesh, *, n, cap_local, block, cap_send,
         rvalid = (jnp.arange(cap_send, dtype=jnp.int32)[None, :]
                   < rcounts[:, None]).reshape(-1)
         buf, cnt, drop_own = dedup.dedup_compact(rows, rvalid, cap_local)
+        if donate_ratio is not None:
+            me = jnp.asarray(0, jnp.int32)
+            for ax in axes:
+                me = me * mesh.shape[ax] + jax.lax.axis_index(ax)
+            counts_all = jax.lax.all_gather(cnt, axes).astype(jnp.int32)
+            buf, cnt, stats = _donate(
+                buf, cnt, counts_all, me, ndev=ndev, cap_local=cap_local,
+                cap_send=cap_send, w=w, axes=axes,
+                donate_ratio=donate_ratio)
+        else:
+            stats = jnp.zeros((4,), jnp.int32)
         dropped = (drop_local + drop_send + drop_own)[None]
-        return buf, cnt[None].astype(jnp.int32), dropped.astype(jnp.int32)
+        return (buf, cnt[None].astype(jnp.int32),
+                dropped.astype(jnp.int32), stats)
 
     spec_sharded = P(axes)
     return compat.shard_map(
         local_fn, mesh,
         in_specs=(P(), spec_sharded, spec_sharded, P(), P()),
-        out_specs=(spec_sharded, spec_sharded, spec_sharded))
+        out_specs=(spec_sharded, spec_sharded, spec_sharded, P()))
 
 
 _DIST_FN_CACHE: dict = {}
 
 
 def _dist_fns(mesh, *, n, cap_local, block, cap_send, use_mmw,
-              use_simplicial, schedule, backend):
+              use_simplicial, schedule, backend, donate_ratio=None):
     """(jitted per-level fn, jitted fused decide fn) for one config.
 
     Module-level cache: jit compilation caches key on function identity, so
     rebuilding the closures per ``decide`` call (the old behaviour) forced
     a retrace for every k of the iterative deepening."""
     key = (mesh, n, cap_local, block, cap_send, use_mmw, use_simplicial,
-           schedule, backend)
+           schedule, backend, donate_ratio)
     if key in _DIST_FN_CACHE:
         return _DIST_FN_CACHE[key]
 
     level_sm = _make_level_shardmap(
         mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
         use_mmw=use_mmw, use_simplicial=use_simplicial, schedule=schedule,
-        backend=backend)
+        backend=backend, donate_ratio=donate_ratio)
 
     def fused_decide_fn(adj, states, counts, k, target, allowed):
         """Whole decide loop device-resident: mirrors engine._fused_decide
@@ -165,19 +220,24 @@ def _dist_fns(mesh, *, n, cap_local, block, cap_send, use_mmw,
         zero = jnp.asarray(0, jnp.int32)
 
         def cond(c):
-            _states, counts, level, _expanded, _dropped = c
+            _states, counts, level, _expanded, _dropped, _stats = c
             return (level < target) & (jnp.sum(counts) > 0)
 
         def body(c):
-            states, counts, level, expanded, dropped = c
+            states, counts, level, expanded, dropped, stats = c
             expanded = expanded + jnp.sum(counts)
-            states, counts, drop = level_sm(adj, states, counts, k, allowed)
+            states, counts, drop, lstats = level_sm(adj, states, counts, k,
+                                                    allowed)
+            stats = jnp.stack([stats[0] + lstats[0], stats[1] + lstats[1],
+                               stats[2] + lstats[2],
+                               jnp.maximum(stats[3], lstats[3])])
             return (states, counts, level + 1, expanded,
-                    dropped + jnp.sum(drop))
+                    dropped + jnp.sum(drop), stats)
 
-        _states, counts, _level, expanded, dropped = jax.lax.while_loop(
-            cond, body, (states, counts, zero, zero, zero))
-        return jnp.sum(counts) > 0, dropped, expanded
+        _states, counts, _level, expanded, dropped, stats = \
+            jax.lax.while_loop(cond, body, (states, counts, zero, zero,
+                                            zero, jnp.zeros((4,), jnp.int32)))
+        return jnp.sum(counts) > 0, dropped, expanded, stats
 
     fns = (jax.jit(level_sm), jax.jit(fused_decide_fn))
     _DIST_FN_CACHE[key] = fns
@@ -206,18 +266,99 @@ def _init_frontier(mesh, cap_local, w):
             jax.device_put(jnp.asarray(counts), sh_counts))
 
 
+def decide_launch(g: Graph, k: int, clique, mesh: Mesh, *,
+                  cap_local: int, block: int, use_mmw: bool = False,
+                  use_simplicial: bool = False,
+                  schedule: str = "doubling", backend: str = "jax",
+                  donate_ratio: Optional[float]
+                  = shard_lib.DEFAULT_DONATE_RATIO,
+                  resume: Optional[dict] = None
+                  ) -> engine_lib.DispatchHandle:
+    """Enqueue one fused mesh-sharded decide; return its in-flight handle.
+
+    The mesh twin of ``shard.decide_sharded_async``: one dispatch runs the
+    whole rung device-resident (level loop, ownership all_to_all, owner
+    dedup, threshold donation), and ``handle.result()`` performs the one
+    deferred host sync, yielding a one-element ``[batch.LaneResult]`` so a
+    mesh rung drops into the same serving/sync machinery as a lane or a
+    vmapped shard group.  This is the path that unifies the distributed
+    solver with the serving pool: ``decide_distributed(engine="fused")``
+    is launch + immediate ``result()``."""
+    from . import batch as batch_lib
+
+    backend_lib.validate(backend, mode="sort", schedule=schedule,
+                         use_mmw=use_mmw, use_simplicial=use_simplicial)
+    n = g.n
+    block = engine_lib.validate_geometry(cap_local, block)
+    target = n - max(k + 1, len(clique))
+    if target <= 0:
+        res = [batch_lib.LaneResult(True, False, 0)]
+        return engine_lib.DispatchHandle((), lambda host: res,
+                                         _result=res, _done=True)
+    w = bitset.n_words(n)
+    ndev = mesh.devices.size
+    adj_dev = jnp.asarray(g.packed())
+    allowed_dev = jnp.asarray(_allowed_words(n, clique))
+    cap_send = max(32, (2 * cap_local) // ndev)
+
+    states, counts = _init_frontier(mesh, cap_local, w)
+    start_level, expanded0, inexact0 = 0, 0, False
+    if resume is not None:
+        states, counts = _restore(mesh, resume, cap_local, w)
+        start_level = resume["level"]
+        expanded0 = int(resume.get("expanded", 0))
+        inexact0 = bool(resume.get("inexact", False))
+
+    _level_fn, fused_fn = _dist_fns(
+        mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
+        use_mmw=use_mmw, use_simplicial=use_simplicial, schedule=schedule,
+        backend=backend, donate_ratio=donate_ratio)
+    feas_dev, drop_dev, exp_dev, stats_dev = fused_fn(
+        adj_dev, states, counts, jnp.asarray(k, jnp.int32),
+        jnp.asarray(target - start_level, jnp.int32), allowed_dev)
+    engine_lib.count(dispatches=1)
+
+    def finalize(host):
+        feas, drop, exp, stats = host
+        shard_lib._record_stats(stats)
+        return [batch_lib.LaneResult(bool(feas),
+                                     inexact0 or int(drop) > 0,
+                                     expanded0 + int(exp))]
+
+    return engine_lib.DispatchHandle(
+        (feas_dev, drop_dev, exp_dev, stats_dev), finalize)
+
+
+def _allowed_words(n: int, clique) -> np.ndarray:
+    allowed = np.asarray(bitset.full(n)).copy()
+    for v in clique:
+        allowed[v >> 5] &= ~np.uint32(np.uint32(1) << np.uint32(v & 31))
+    return allowed
+
+
 def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
                        cap_local: int, block: int, use_mmw: bool = False,
                        use_simplicial: bool = False,
                        schedule: str = "doubling", backend: str = "jax",
                        checkpoint_cb=None, resume: Optional[dict] = None,
-                       engine: str = "fused"):
+                       engine: str = "fused",
+                       donate_ratio: Optional[float]
+                       = shard_lib.DEFAULT_DONATE_RATIO):
     """Distributed decision: is tw(g) <= k?  Mirrors solver.decide.
 
     ``engine="fused"`` runs the whole level loop as one device-resident
     program (the sharded analogue of ``engine.fused_decide``): zero host
     syncs until the verdict.  Per-level checkpointing needs host snapshots,
-    so a ``checkpoint_cb`` forces the host loop."""
+    so a ``checkpoint_cb`` forces the host loop.  ``donate_ratio`` tunes
+    the per-level work donation (None disables it)."""
+    if engine == "fused" and checkpoint_cb is None:
+        res = decide_launch(
+            g, k, clique, mesh, cap_local=cap_local, block=block,
+            use_mmw=use_mmw, use_simplicial=use_simplicial,
+            schedule=schedule, backend=backend, donate_ratio=donate_ratio,
+            resume=resume).result()[0]
+        return res.feasible, res.inexact, res.expanded
+
     backend_lib.validate(backend, mode="sort", schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial)
     n = g.n
@@ -228,10 +369,7 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
     w = bitset.n_words(n)
     ndev = mesh.devices.size
     adj_dev = jnp.asarray(g.packed())
-    allowed = np.asarray(bitset.full(n)).copy()
-    for v in clique:
-        allowed[v >> 5] &= ~np.uint32(np.uint32(1) << np.uint32(v & 31))
-    allowed_dev = jnp.asarray(allowed)
+    allowed_dev = jnp.asarray(_allowed_words(n, clique))
     cap_send = max(32, (2 * cap_local) // ndev)
 
     states, counts = _init_frontier(mesh, cap_local, w)
@@ -242,31 +380,23 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
         expanded = int(resume.get("expanded", 0))
         inexact = bool(resume.get("inexact", False))
 
-    level_fn, fused_fn = _dist_fns(
+    level_fn, _fused_fn = _dist_fns(
         mesh, n=n, cap_local=cap_local, block=block, cap_send=cap_send,
         use_mmw=use_mmw, use_simplicial=use_simplicial, schedule=schedule,
-        backend=backend)
+        backend=backend, donate_ratio=donate_ratio)
     kdev = jnp.asarray(k, jnp.int32)
-
-    if engine == "fused" and checkpoint_cb is None:
-        tdev = jnp.asarray(target - start_level, jnp.int32)
-        feas_dev, drop_dev, exp_dev = fused_fn(
-            adj_dev, states, counts, kdev, tdev, allowed_dev)
-        engine_lib.count(dispatches=1)
-        feas, drop, exp = jax.device_get((feas_dev, drop_dev, exp_dev))
-        engine_lib.count(host_syncs=1)
-        return bool(feas), inexact or int(drop) > 0, expanded + int(exp)
 
     for level in range(start_level, target):
         counts_h = np.asarray(counts)
         engine_lib.count(host_syncs=1)
         expanded += int(counts_h.sum())              # states popped this level
-        states, counts, dropped = level_fn(
+        states, counts, dropped, stats = level_fn(
             adj_dev, states, counts, kdev, allowed_dev)
         engine_lib.count(dispatches=1)
         inexact |= int(jnp.sum(dropped)) > 0
         total = int(jnp.sum(counts))
         engine_lib.count(host_syncs=2)
+        shard_lib._record_stats(np.asarray(stats))
         if checkpoint_cb is not None:
             checkpoint_cb(dict(level=level + 1, k=k, expanded=expanded,
                                inexact=inexact,
@@ -311,6 +441,8 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                       use_preprocess: bool = True,
                       checkpoint_cb=None, verbose: bool = False,
                       engine: str = "fused",
+                      donate_ratio: Optional[float]
+                      = shard_lib.DEFAULT_DONATE_RATIO,
                       impl: Optional[str] = None) -> SolveResult:
     """Distributed analogue of solver.solve (width only, no reconstruction)."""
     t0 = time.time()
@@ -349,7 +481,8 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                 gk, k, clique, mesh, cap_local=cap_local, block=block,
                 use_mmw=use_mmw, use_simplicial=use_simplicial,
                 schedule=schedule, backend=backend,
-                checkpoint_cb=checkpoint_cb, engine=engine)
+                checkpoint_cb=checkpoint_cb, engine=engine,
+                donate_ratio=donate_ratio)
             expanded += exp
             any_inexact |= inexact
             if verbose:

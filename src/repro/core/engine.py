@@ -50,17 +50,29 @@ U32 = jnp.uint32
 # dispatch/sync accounting (host-side, zero overhead on device):
 #   dispatches — jitted program launches issued by a solver path
 #   host_syncs — device->host scalar/buffer reads that block on the device
-COUNTERS = {"dispatches": 0, "host_syncs": 0}
+# plus shard-health counters fed by the sharded engine (core.shard /
+# core.distributed): donation events/rows, idle-shard level steps, and the
+# peak per-shard occupancy seen (a max, not a sum)
+COUNTERS = {
+    "dispatches": 0,
+    "host_syncs": 0,
+    "shard_donations": 0,
+    "shard_donated_rows": 0,
+    "shard_idle_steps": 0,
+    "shard_peak_occupancy": 0,
+}
 
 
 def reset_counters():
-    COUNTERS["dispatches"] = 0
-    COUNTERS["host_syncs"] = 0
+    for key in COUNTERS:
+        COUNTERS[key] = 0
 
 
-def count(dispatches: int = 0, host_syncs: int = 0):
+def count(dispatches: int = 0, host_syncs: int = 0, **extra: int):
     COUNTERS["dispatches"] += dispatches
     COUNTERS["host_syncs"] += host_syncs
+    for key, val in extra.items():
+        COUNTERS[key] += val
 
 
 @dataclasses.dataclass

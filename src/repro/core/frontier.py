@@ -70,6 +70,22 @@ def lane_frontiers(lanes: int, cap: int, w: int) -> Frontier:
                     dropped=jnp.zeros((lanes,), dtype=jnp.int32))
 
 
+def shard_frontiers(shards: int, cap: int, w: int) -> Frontier:
+    """One instance's DP root split across ``shards`` frontier shards.
+
+    Unlike ``lane_frontiers`` (B independent instances, B roots) a
+    sharded frontier holds ONE search: the single ``{∅}`` root lives in
+    shard 0 (mirroring ``distributed._init_frontier``) and subsequent
+    levels spread across shards by ownership routing (``core.shard``).
+    Leaves carry a leading ``shards`` axis: states ``(S, cap, W)``,
+    count/dropped ``(S,)``."""
+    count = np.zeros((shards,), dtype=np.int32)
+    count[0] = 1
+    return Frontier(states=jnp.zeros((shards, cap, w), dtype=jnp.uint32),
+                    count=jnp.asarray(count),
+                    dropped=jnp.zeros((shards,), dtype=jnp.int32))
+
+
 def frontier_bytes(cap: int, w: int, lanes: int = 1) -> int:
     """Device bytes of a ``(lanes, cap, W)`` uint32 frontier pool.
 

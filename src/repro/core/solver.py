@@ -347,7 +347,8 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
                 use_paths: bool, reconstruct: bool, start_k: Optional[int],
                 verbose: bool, backend: str = "jax",
                 use_simplicial: bool = False,
-                engine: str = "fused", lanes: int = 1) -> SolveResult:
+                engine: str = "fused", lanes: int = 1, shards: int = 1,
+                donate_ratio: Optional[float] = None) -> SolveResult:
     """Iterative deepening on one (biconnected) block.
 
     ``cap=None`` right-sizes the frontier buffer for this block with
@@ -363,7 +364,16 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
     ``expanded`` and ``per_k`` are bit-identical to ``lanes=1``.
     Speculation needs the fused device loop and no level snapshots;
     with ``engine="host"`` or ``reconstruct=True`` it falls back to
-    sequential rungs."""
+    sequential rungs.
+
+    ``shards > 1`` decides each rung with the frontier split across S
+    concurrent workers (``core.shard``: single-writer ownership routing +
+    threshold work donation) — bit-identical verdicts/``expanded``/
+    ``per_k``, aggregate frontier capacity S× larger.  Sharding takes the
+    whole device, so it forces ``lanes=1``; reconstruction replays the
+    winning rung on the host engine uncounted (the scheduler's
+    ``_certify`` pattern).  ``shards=1`` is exactly the unsharded path
+    (no wrapper, no counter drift)."""
     t0 = time.time()
     plan = plan_block(g, use_clique=use_clique, use_paths=use_paths,
                       start_k=start_k)
@@ -373,9 +383,12 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
         from . import batch as batch_lib
         cap = batch_lib.plan_capacity(g.n, block=block)
 
+    shard_n = max(1, int(shards))
+    if shard_n > 1 and engine != "fused":
+        shard_n = 1       # the host loop is single-frontier only
     spec = max(1, int(lanes))
-    if spec > 1 and (reconstruct or engine != "fused"):
-        spec = 1          # snapshots/host loop are single-lane only
+    if spec > 1 and (reconstruct or engine != "fused" or shard_n > 1):
+        spec = 1          # snapshots/host loop/sharding are single-lane only
     decide_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
                      m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
                      backend=backend, use_simplicial=use_simplicial)
@@ -385,7 +398,12 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
     k = plan.k0
     while k < plan.ub:
         ks = list(range(k, min(k + spec, plan.ub)))
-        if spec > 1:
+        if shard_n > 1:
+            from . import shard as shard_lib
+            results = [shard_lib.decide_sharded(
+                plan.graph_at(ks[0]), ks[0], plan.clique, shards=shard_n,
+                donate_ratio=donate_ratio, **decide_kw)]
+        elif spec > 1:
             from . import batch as batch_lib
             results = batch_lib.decide_batch(
                 g, ks, plan.clique,
@@ -405,8 +423,16 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
             if res.feasible:
                 order = None
                 if reconstruct:
+                    levels = getattr(res, "levels", None)
+                    if levels is None:
+                        # sharded rung: replay the winning k on the host
+                        # engine for snapshots, uncounted (the scheduler's
+                        # ``_certify`` pattern — expanded stays the ladder's)
+                        levels = decide(plan.graph_at(kk), kk, plan.clique,
+                                        keep_levels=True, engine="host",
+                                        **decide_kw).levels
                     order = reconstruct_order(plan.graph_at(kk), kk,
-                                              plan.clique, res.levels)
+                                              plan.clique, levels)
                 return SolveResult(kk, plan.exact_at(kk, any_inexact),
                                    plan.lb, plan.ub, expanded_total,
                                    time.time() - t0, order, per_k)
@@ -464,7 +490,8 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
           use_preprocess: bool = True, reconstruct: bool = False,
           start_k: Optional[int] = None, verbose: bool = False,
           backend: str = "jax", use_simplicial: bool = False,
-          engine: str = "fused", lanes: int = 1,
+          engine: str = "fused", lanes: int = 1, shards: int = 1,
+          donate_ratio: Optional[float] = None,
           impl: Optional[str] = None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
@@ -486,6 +513,10 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
     ``lanes > 1`` turns the deepening ladder speculative: each dispatch
     decides ``lanes`` consecutive k concurrently through the multi-lane
     engine (``core.batch``) — same results, fewer dispatches.
+    ``shards > 1`` splits each rung's *frontier* across S concurrent
+    workers instead (``core.shard``: single-writer ownership routing,
+    threshold work donation tuned by ``donate_ratio``) — bit-identical
+    results with S× the aggregate frontier capacity; forces ``lanes=1``.
     ``reconstruct=True`` returns a certified elimination order; with
     preprocessing on, each block is reconstructed with the host engine and
     the block-local orders are stitched back through the preprocess vertex
@@ -501,7 +532,8 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
         schedule = "doubling" if backend == "pallas" else "while"
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
-                         m_bits=m_bits, lanes=int(lanes))
+                         m_bits=m_bits, lanes=int(lanes),
+                         shards=int(shards))
     if g.n == 0:
         return SolveResult(0, True, 0, 0, 0, 0.0, [], {})
     solve_kw = dict(cap=cap, block=block, mode=mode, use_mmw=use_mmw,
@@ -509,7 +541,7 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
                     use_clique=use_clique, use_paths=use_paths,
                     start_k=start_k, verbose=verbose, backend=backend,
                     use_simplicial=use_simplicial, engine=engine,
-                    lanes=lanes)
+                    lanes=lanes, shards=shards, donate_ratio=donate_ratio)
     if not use_preprocess:
         return solve_block(g, reconstruct=reconstruct, **solve_kw)
 

@@ -5,12 +5,19 @@
     python -m repro.launch.solve --graph myciel3 --backend pallas --simplicial
     python -m repro.launch.solve --graph queen6_6 --distributed --devices 8
     python -m repro.launch.solve --graph myciel4 --batch 4
+    python -m repro.launch.solve --graph queen6_6 --shards 4
     python -m repro.launch.solve --dimacs path/to/graph.gr
 
 ``--batch N`` runs the iterative-deepening ladder speculatively: each
 dispatch decides N consecutive widths through the multi-lane engine
 (``repro.core.batch``), and the smallest feasible one wins — same
 results, fewer dispatches.
+
+``--shards S`` scales one rung *out* instead: the frontier is split
+across S vmapped shard lanes (owner-hash routing + work donation,
+``repro.core.shard``), multiplying per-level throughput and aggregate
+frontier capacity for a single heavy instance — results bit-identical
+to the sequential ladder.
 
 ``--backend`` selects the op implementations through the registry
 (``repro.core.backend``): "jax" reference or the fused Pallas wavefront
@@ -54,6 +61,15 @@ def main(argv=None):
                          "concurrently in one multi-lane dispatch "
                          "(core.batch; fused engine only, results "
                          "bit-identical to --batch 1). Default 1")
+    ap.add_argument("--shards", type=int, default=1, metavar="S",
+                    help="intra-request scale-out: split each rung's "
+                         "frontier across S vmapped shard lanes with "
+                         "work donation (core.shard; fused engine only, "
+                         "results bit-identical to --shards 1). Default 1")
+    ap.add_argument("--donate-ratio", type=float, default=None,
+                    help="sharded work-donation trigger: rebalance when "
+                         "the max shard exceeds ratio x mean occupancy "
+                         "(default core.shard.DEFAULT_DONATE_RATIO)")
     ap.add_argument("--mmw", action="store_true")
     ap.add_argument("--simplicial", action="store_true",
                     help="enable simplicial-vertex branch collapse")
@@ -92,7 +108,7 @@ def main(argv=None):
         backend_lib.validate(args.backend, mode=args.mode,
                              schedule=args.schedule, use_mmw=args.mmw,
                              use_simplicial=args.simplicial,
-                             lanes=args.batch)
+                             lanes=args.batch, shards=args.shards)
     except backend_lib.BackendCapabilityError as e:
         print(f"[solve] unsupported configuration: {e}", file=sys.stderr)
         return 2
@@ -113,6 +129,9 @@ def main(argv=None):
     if args.distributed:
         mesh = dist_lib.make_solver_mesh()
         cap = args.cap if args.cap is not None else 1 << 18
+        kw = {}
+        if args.donate_ratio is not None:
+            kw["donate_ratio"] = args.donate_ratio
         res = dist_lib.solve_distributed(
             g, mesh, cap_local=cap // max(1, mesh.devices.size),
             block=args.block, use_mmw=args.mmw,
@@ -120,7 +139,7 @@ def main(argv=None):
             schedule=args.schedule, backend=args.backend,
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess, verbose=args.verbose,
-            engine=args.engine)
+            engine=args.engine, **kw)
     else:
         res = solver_lib.solve(
             g, cap=args.cap, block=args.block, mode=args.mode,
@@ -129,7 +148,8 @@ def main(argv=None):
             use_clique=not args.no_clique, use_paths=not args.no_paths,
             use_preprocess=not args.no_preprocess,
             reconstruct=args.reconstruct, verbose=args.verbose,
-            engine=args.engine, lanes=args.batch)
+            engine=args.engine, lanes=args.batch, shards=args.shards,
+            donate_ratio=args.donate_ratio)
 
     print(f"[solve] treewidth={res.width} exact={res.exact} "
           f"lb={res.lb} ub={res.ub} states_expanded={res.expanded} "

@@ -61,6 +61,13 @@ def main(argv=None):
                     choices=["doubling", "while", "linear", "matmul"])
     ap.add_argument("--reconstruct", action="store_true",
                     help="request a certified elimination order per solve")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="scale every request out across this many pool "
+                         "slots (sharded frontier + work donation; must "
+                         "be <= --lanes)")
+    ap.add_argument("--donate-ratio", type=float, default=None,
+                    help="work-donation trigger for sharded requests "
+                         "(default core.shard.DEFAULT_DONATE_RATIO)")
     ap.add_argument("--no-preprocess", action="store_true")
     ap.add_argument("--compare", action="store_true",
                     help="also solve the stream sequentially; assert "
@@ -102,12 +109,14 @@ def main(argv=None):
         kw["cap_max"] = args.cap_max
     try:
         sched = TwScheduler(lanes=args.lanes, budget_bytes=budget,
+                            donate_ratio=args.donate_ratio,
                             verbose=args.verbose, **kw)
     except backend_lib.BackendCapabilityError as e:
         print(f"[twserve] unsupported configuration: {e}", file=sys.stderr)
         return 2
 
-    rids = [sched.submit(g, reconstruct=args.reconstruct) for g in gs]
+    rids = [sched.submit(g, reconstruct=args.reconstruct,
+                         shards=args.shards) for g in gs]
     engine_lib.reset_counters()
     t0 = time.time()
     done = sched.run()

@@ -18,6 +18,7 @@ per line:
      "mode": "bloom", "speculate": 2}                -> {"ok": true, "rid": 1}
     {"op": "submit", "graph": "queen5", "priority": 1,
      "deadline_s": 2.5}                              -> {"ok": true, "rid": 2}
+    {"op": "submit", "graph": "queen5", "shards": 4} -> {"ok": true, "rid": 3}
     {"op": "status", "rid": 0}   -> {"ok": true, "state": "running", "lb": 2, "ub": 4}
     {"op": "stream", "rid": 0}   -> one event per line, ends with a terminal
                                     event ({"event": "done" | "cancelled" | "error"})
@@ -139,7 +140,7 @@ def _wire_to_graph(msg: dict):
 
 
 _KNOBS = ("reconstruct", "start_k", "mode", "use_mmw", "use_simplicial",
-          "cap", "speculate", "priority", "deadline_s")
+          "cap", "speculate", "shards", "priority", "deadline_s")
 
 
 class TwServer:
@@ -411,6 +412,11 @@ def main(argv=None):
     ap.add_argument("--prio-weight", type=int, default=4,
                     help="weighted-FIFO anti-starvation ratio: preferential "
                          "admissions per base-class admission")
+    ap.add_argument("--donate-ratio", type=float, default=None,
+                    help="work-donation trigger for sharded requests "
+                         "(submit knob \"shards\"): rebalance when the "
+                         "max shard exceeds ratio x mean occupancy "
+                         "(default core.shard.DEFAULT_DONATE_RATIO)")
     ap.add_argument("--keep-results", type=int,
                     default=DEFAULT_KEEP_RESULTS,
                     help="finished requests retained for status/result/"
@@ -434,6 +440,7 @@ def main(argv=None):
                        use_preprocess=not args.no_preprocess,
                        max_queue=args.max_queue, pipeline=args.pipeline,
                        prio_weight=args.prio_weight,
+                       donate_ratio=args.donate_ratio,
                        budget_bytes=budget, verbose=args.verbose)
     except backend_lib.BackendCapabilityError as e:
         print(f"[twserved] unsupported pool configuration: {e}",

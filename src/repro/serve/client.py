@@ -33,7 +33,8 @@ Runnable example (start a server first, e.g.
     c.shutdown()
 
 Per-request knobs (``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
-``speculate``, ``reconstruct``, ``start_k``, and the traffic-shaping
+``speculate``, ``shards`` — intra-request scale-out across that many
+pool slots — ``reconstruct``, ``start_k``, and the traffic-shaping
 pair ``priority``/``deadline_s``) ride through ``submit`` to
 ``TwScheduler.submit`` — an override the pool's backend cannot run fails
 that submit alone with ``TwServerError`` (the scheduler's per-request
@@ -121,7 +122,7 @@ class TwClient:
         ``Graph`` or a ``core.graph.REGISTRY`` generator name; ``knobs``
         are the per-request overrides (``reconstruct``, ``start_k``,
         ``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
-        ``speculate``, ``priority``, ``deadline_s``).  Raises
+        ``speculate``, ``shards``, ``priority``, ``deadline_s``).  Raises
         ``TwServerError`` with ``retry_after`` set when the server shed
         the submit under backpressure."""
         req = {"op": "submit", **knobs}

@@ -62,6 +62,19 @@ class QueueFull(RuntimeError):
         self.retry_after = retry_after
 
 
+class _Shadow:
+    """Occupancy marker for the extra slots of a multi-slot admission.
+
+    A request admitted with width S occupies one *primary* slot (holding
+    the caller state) plus S-1 shadow slots pointing back at it; shadows
+    keep ``free`` honest and are recycled with their primary."""
+
+    __slots__ = ("primary",)
+
+    def __init__(self, primary: int):
+        self.primary = primary
+
+
 class SlotPool:
     """``n_slots`` recyclable slots fed from weighted-FIFO priority queues.
 
@@ -75,10 +88,19 @@ class SlotPool:
     ``prio_weight`` is the anti-starvation ratio: at most that many
     consecutive preferential pops before the least urgent waiting class
     is served once.
-    """
+
+    ``slots_of`` (optional) maps a queued item to the number of slots it
+    occupies — the sharded-request hook: a width-S item is admitted only
+    when S slots are free, filling one primary slot plus S-1 ``_Shadow``
+    markers that release together.  Admission is head-of-line: when the
+    most urgent queued item does not fit, admission stops rather than
+    skipping it, so wide requests cannot be starved by a stream of narrow
+    ones (the flip side: narrow items behind a waiting wide one wait too
+    — DESIGN.md §13)."""
 
     def __init__(self, n_slots: int, *, max_queue: Optional[int] = None,
-                 prio_weight: int = 4):
+                 prio_weight: int = 4,
+                 slots_of: Optional[Callable[[object], int]] = None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot (got {n_slots})")
         if max_queue is not None and max_queue < 1:
@@ -86,6 +108,7 @@ class SlotPool:
         self.slots: List[Optional[object]] = [None] * n_slots
         self.max_queue = max_queue
         self.prio_weight = max(1, int(prio_weight))
+        self.slots_of = slots_of
         self._queues: Dict[int, deque] = {}   # priority class -> FIFO
         self._starve = 0   # consecutive preferential pops while base waits
 
@@ -128,19 +151,33 @@ class SlotPool:
                     return item
         return None
 
-    def _pop(self):
-        """Weighted-FIFO pop: most urgent class wins, except that after
-        ``prio_weight`` consecutive preferential pops while a less urgent
-        class waits, the least urgent class is served once."""
+    def _pick(self) -> Optional[int]:
+        """The priority class the next pop serves (no state mutated)."""
         prios = sorted((p for p, q in self._queues.items() if q),
                        reverse=True)
         if not prios:
             return None
-        pick = prios[0]
+        if len(prios) > 1 and self._starve >= self.prio_weight:
+            return prios[-1]
+        return prios[0]
+
+    def _peek(self):
+        """The item the next ``_pop`` would return (queues untouched)."""
+        pick = self._pick()
+        return None if pick is None else self._queues[pick][0]
+
+    def _pop(self):
+        """Weighted-FIFO pop: most urgent class wins, except that after
+        ``prio_weight`` consecutive preferential pops while a less urgent
+        class waits, the least urgent class is served once."""
+        pick = self._pick()
+        if pick is None:
+            return None
+        prios = sorted((p for p, q in self._queues.items() if q),
+                       reverse=True)
         if len(prios) == 1:
             self._starve = 0
-        elif self._starve >= self.prio_weight:
-            pick = prios[-1]
+        elif pick == prios[-1] and self._starve >= self.prio_weight:
             self._starve = 0
         else:
             self._starve += 1
@@ -152,27 +189,51 @@ class SlotPool:
 
     # ------------------------------------------------------------ admission
 
+    def _width(self, item) -> int:
+        return max(1, int(self.slots_of(item))) if self.slots_of else 1
+
     def admit(self, start: Callable[[object], Optional[object]]
               ) -> List[Tuple[int, object]]:
-        """Fill free slots from the queues; returns [(slot index, state)]."""
+        """Fill free slots from the queues; returns [(slot index, state)].
+
+        A width-S item (``slots_of``) is placed in the lowest free slot
+        with S-1 shadows in the next free ones; the returned index is the
+        primary.  Admission stops at the first queued item that does not
+        fit (head-of-line, see class docstring)."""
         admitted = []
-        for i, s in enumerate(self.slots):
-            if s is not None:
-                continue
-            while self.qsize:
-                state = start(self._pop())
-                if state is not None:
-                    self.slots[i] = state
-                    admitted.append((i, state))
-                    break
+        while True:
+            item = self._peek()
+            if item is None:
+                break
+            need = self._width(item)
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if len(free) < need:
+                break
+            state = start(self._pop())
+            if state is None:
+                continue          # finished at admission; slot stays free
+            primary = free[0]
+            self.slots[primary] = state
+            for j in free[1:need]:
+                self.slots[j] = _Shadow(primary)
+            admitted.append((primary, state))
         return admitted
 
     def release(self, i: int) -> None:
+        """Free slot ``i`` and any shadows it anchors (one call recycles a
+        sharded request's whole slot group)."""
         self.slots[i] = None
+        for j, s in enumerate(self.slots):
+            if isinstance(s, _Shadow) and s.primary == i:
+                self.slots[j] = None
 
     def active(self) -> List[Tuple[int, object]]:
-        """Occupied slots in slot order (the batched-step iteration set)."""
-        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        """Occupied slots in slot order (the batched-step iteration set).
+
+        One entry per admitted item: shadow slots of a multi-slot
+        admission are occupied but not listed."""
+        return [(i, s) for i, s in enumerate(self.slots)
+                if s is not None and not isinstance(s, _Shadow)]
 
     @property
     def free(self) -> int:

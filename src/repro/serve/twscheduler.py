@@ -119,6 +119,7 @@ from repro.core import backend as backend_lib
 from repro.core import batch, bitset, bloom
 from repro.core import engine as engine_lib
 from repro.core import frontier as frontier_lib
+from repro.core import shard as shard_lib
 from repro.core import solver as solver_lib
 from repro.core.graph import Graph
 
@@ -134,6 +135,11 @@ class SolveRequest:
     ``"bloom"``), ``use_mmw``/``use_simplicial`` the pruning,
     ``cap`` pins an explicit frontier buffer, and ``speculate`` the lane
     share (that many consecutive deepening rungs per dispatch).
+    ``shards`` > 1 scales the request *out* instead of deep: it occupies
+    that many pool slots and each of its rungs runs as one sharded
+    dispatch (``core.shard``) whose frontier is split across ``shards``
+    lanes with work donation — bit-identical verdicts, fewer scheduler
+    rounds for heavy instances.
     ``priority`` is the admission class (higher = more urgent) and
     ``deadline`` the absolute ``time.monotonic()`` instant past which the
     request is preempted with its anytime bounds.  ``on_event`` receives
@@ -150,6 +156,7 @@ class SolveRequest:
     use_simplicial: Optional[bool] = None
     cap: Optional[int] = None
     speculate: int = 1
+    shards: int = 1
     priority: int = 0
     deadline: Optional[float] = None
     on_event: Optional[Callable[[dict], None]] = None
@@ -188,6 +195,21 @@ class TwScheduler:
     flight before a ``sync`` is forced (depth 2 keeps the device busy
     across the host-sync gap; discarded speculative rungs keep parity).
 
+    Intra-request scale-out (DESIGN.md §13): ``submit(..., shards=S)``
+    admits the request into S pool slots and runs each of its ladder
+    rungs as one sharded dispatch (``core.shard.decide_sharded_async``)
+    — the frontier split S ways with per-rung work donation, verdicts
+    bit-identical to the single-lane ladder.  Slot-proportional
+    speculation rides along: holding S slots entitles the request to S
+    concurrent rung dispatches per round, so its deepening ladder
+    climbs ``max(speculate, shards)`` rungs per round and a heavy
+    sharded request finishes in measurably fewer scheduler rounds than
+    the same request unsharded (overshoot past the winning rung is
+    discarded uncounted — the explicit-``speculate`` semantics).
+    ``donate_ratio`` tunes the donation trigger for every sharded
+    request in the pool (``None`` =
+    ``core.shard.DEFAULT_DONATE_RATIO``).
+
     Two driving styles:
 
     * blocking drain — ``run()`` (or repeated ``step()``), as in the
@@ -215,7 +237,8 @@ class TwScheduler:
                  use_paths: bool = True, use_preprocess: bool = True,
                  cap_max: int = batch.DEFAULT_CAP, budget_bytes=None,
                  max_queue: Optional[int] = None, prio_weight: int = 4,
-                 pipeline: int = 1, verbose: bool = False):
+                 pipeline: int = 1, donate_ratio: Optional[float] = None,
+                 verbose: bool = False):
         if schedule is None:
             schedule = "doubling" if backend == "pallas" else "while"
         backend_lib.validate(backend, mode=mode, schedule=schedule,
@@ -226,8 +249,10 @@ class TwScheduler:
         if pipeline < 1:
             raise ValueError(f"pipeline depth must be >= 1 (got {pipeline})")
         self.pool = SlotPool(int(lanes), max_queue=max_queue,
-                             prio_weight=prio_weight)
+                             prio_weight=prio_weight,
+                             slots_of=lambda r: getattr(r, "shards", 1))
         self.cap = cap
+        self.donate_ratio = donate_ratio
         self.cap_max = cap_max
         self.budget_bytes = budget_bytes
         self.block = block
@@ -281,6 +306,7 @@ class TwScheduler:
                use_simplicial: Optional[bool] = None,
                cap: Optional[int] = None,
                speculate: int = 1,
+               shards: int = 1,
                priority: int = 0,
                deadline_s: Optional[float] = None,
                on_event: Optional[Callable[[dict], None]] = None) -> int:
@@ -290,7 +316,10 @@ class TwScheduler:
         surface (``SolveRequest``).  An override the pool's backend
         cannot run raises ``BackendCapabilityError`` (an invalid explicit
         ``cap`` raises ``ValueError``) *here*, for this request only —
-        the pool keeps serving.  ``priority`` picks the admission class,
+        the pool keeps serving.  ``shards`` > 1 scales the request out
+        across that many pool slots (must fit the pool: ``shards`` >
+        ``lanes`` raises ``ValueError``).  ``priority`` picks the
+        admission class,
         ``deadline_s`` (seconds from now) arms anytime preemption.  When
         the admission queue is at ``max_queue`` the submit is rejected
         with ``slots.QueueFull`` carrying a ``retry_after`` hint — the
@@ -302,16 +331,24 @@ class TwScheduler:
         deadline = None
         if deadline_s is not None:
             deadline = time.monotonic() + float(deadline_s)
+        shards = int(shards)
+        if not 1 <= shards <= len(self.pool):
+            raise ValueError(
+                f"shards={shards} does not fit the pool "
+                f"({len(self.pool)} slot(s)); a sharded request needs "
+                "shards slots, all from this pool")
         req = SolveRequest(0, g, reconstruct, start_k, mode=mode,
                            use_mmw=use_mmw, use_simplicial=use_simplicial,
                            cap=cap, speculate=max(1, int(speculate)),
+                           shards=shards,
                            priority=int(priority), deadline=deadline,
                            on_event=on_event)
         kw = self._effective_kw(req)
         backend_lib.validate(kw["backend"], mode=kw["mode"],
                              schedule=kw["schedule"], use_mmw=kw["use_mmw"],
                              use_simplicial=kw["use_simplicial"],
-                             m_bits=kw["m_bits"], lanes=len(self.pool))
+                             m_bits=kw["m_bits"], lanes=len(self.pool),
+                             shards=shards)
         if cap is not None:
             engine_lib.validate_geometry(cap, self.block)
         with self._lock:
@@ -587,7 +624,15 @@ class TwScheduler:
                 cur = self._cursor.get(req.rid)
                 k0 = cur[1] if (cur is not None and cur[0] is run) \
                     else run.k
-                hi = min(k0 + req.speculate, run.plan.ub)
+                # slot-proportional speculation: a width-S request holds
+                # S slots, so it is entitled to S concurrent rung
+                # dispatches per round — its ladder climbs S rungs per
+                # round (each rung an S-way sharded dispatch), which is
+                # what lets a sharded heavy request finish in fewer
+                # scheduler rounds (overshoot past the winning rung is
+                # discarded uncounted, same as explicit speculation)
+                win = max(req.speculate, req.shards)
+                hi = min(k0 + win, run.plan.ub)
                 if k0 >= hi:
                     continue      # whole remaining ladder already flying
                 members.append((i, req, inst, run, list(range(k0, hi))))
@@ -603,7 +648,19 @@ class TwScheduler:
                 L = len(self.pool)
 
                 groups: Dict[tuple, tuple] = {}
+                sharded = []    # one (i, req, inst, run, kk, name) per rung
                 for i, req, inst, run, ks in members:
+                    if req.shards > 1:
+                        # scale-out request: each rung is its own sharded
+                        # dispatch (frontier split req.shards ways), not a
+                        # lane of the shared vmapped group
+                        for kk in ks:
+                            sharded.append((i, req, inst, run, kk,
+                                            run.plan.g.name))
+                            self._emit(req, {"event": "rung_started",
+                                             "block": run.plan.g.name,
+                                             "k": kk, "round": self.rounds})
+                        continue
                     lanes, metas = groups.setdefault(self._group_key(req),
                                                      ([], []))
                     for kk in ks:
@@ -619,6 +676,7 @@ class TwScheduler:
                 n_dispatch = sum(len(hs) for _no, hs, _t in self._rounds)
                 n_dispatch += sum(-(-len(lanes) // L)
                                   for lanes, _m in groups.values())
+                n_dispatch += len(sharded)
 
                 handles = []
                 for key, (lanes, metas) in groups.items():
@@ -636,24 +694,48 @@ class TwScheduler:
                             lanes[lo:lo + L], cap=cap, n_pad=self._n_pad,
                             lane_pad=L, **kw)
                         handles.append((handle, metas[lo:lo + L]))
+                for meta in sharded:
+                    i, req, inst, run, kk, name = meta
+                    kw = self._effective_kw(req)
+                    cap = req.cap if req.cap is not None else self.cap
+                    if cap is None:
+                        key = ("shard", req.shards) + self._group_key(req)
+                        cap = self._plan_group_cap(
+                            key,
+                            [batch.Lane(run.plan.graph_at(kk), kk,
+                                        tuple(run.plan.clique))],
+                            n_dispatch, width=req.shards)
+                    handle = shard_lib.decide_sharded_async(
+                        run.plan.graph_at(kk), kk, tuple(run.plan.clique),
+                        shards=req.shards, cap=cap, n_pad=self._n_pad,
+                        donate_ratio=self.donate_ratio, **kw)
+                    # one-element metas: the handle finalizes to a single
+                    # LaneResult, so sync()'s zip feeds it like any lane
+                    handles.append((handle, [meta]))
                 self._rounds.append((self.rounds, handles,
                                      time.monotonic()))
         self._flush_events()
         return launched
 
     def _plan_group_cap(self, key: tuple, lanes: list,
-                        n_dispatch: int = 1) -> int:
+                        n_dispatch: int = 1,
+                        width: Optional[int] = None) -> int:
         """plan_capacity for one config group, ratcheted per group key
         (compile stability) and re-clamped whenever the budget share
         shrinks — because the padded word count grew, or because the
         step launches several concurrent dispatches (``n_dispatch``)
-        that split ``budget_bytes`` between them."""
+        that split ``budget_bytes`` between them.  ``width`` is the
+        dispatch's resident lane count — the full pool for a shared
+        vmapped group (default), ``req.shards`` for a sharded dispatch
+        whose per-shard buffers are what the plan sizes."""
+        if width is None:
+            width = len(self.pool)
         budget = self.budget_bytes
         if budget is not None:
             budget = int(budget) // max(1, n_dispatch)
         w = bitset.n_words(self._n_pad)
         cap = max(batch.plan_capacity(
-            lane.g.n, w, lanes=len(self.pool), block=self.block,
+            lane.g.n, w, lanes=width, block=self.block,
             cap_max=self.cap_max, budget_bytes=budget)
             for lane in lanes)
         cap = max(self._cap_pad.get(key, 0), cap)
@@ -662,7 +744,7 @@ class TwScheduler:
             # ratcheted under a smaller word count (or a
             # fewer-dispatches step) must shrink, or the resident pools
             # would exceed the bytes the knob promises to bound
-            afford = int(budget) // (len(self.pool) * 4 * max(1, w))
+            afford = int(budget) // (width * 4 * max(1, w))
             cap = min(cap, max(32, batch._pow2_floor(afford)))
         self._cap_pad[key] = cap
         return cap

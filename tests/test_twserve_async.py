@@ -49,7 +49,7 @@ def test_decide_lanes_async_matches_blocking_and_defers_the_sync():
 def test_decide_lanes_async_empty_is_a_noop():
     engine.reset_counters()
     assert batch.decide_lanes_async([], **LANE_KW).result() == []
-    assert dict(engine.COUNTERS) == {"dispatches": 0, "host_syncs": 0}
+    assert all(v == 0 for v in engine.COUNTERS.values()), engine.COUNTERS
 
 
 def test_fused_decide_launch_handle_parity():
