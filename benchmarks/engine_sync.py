@@ -6,7 +6,9 @@ GPU; the cost of not doing that is kernel-dispatch serialisation.  This
 bench quantifies it on the Table 1 instances: for each graph it runs the
 full iterative-deepening solve under each engine x backend combination and
 reports wall-clock, jitted-program dispatches, and blocking device→host
-transfers (counted by ``repro.core.engine.COUNTERS``).
+transfers (counted by a per-measurement ``repro.core.telemetry.Tracker``
+— a detached scope, so concurrent process-global accounting never leaks
+into a row).
 
 The backend column tracks the fused pallas wavefront kernel against the
 jax reference composition from day one (ISSUE 2).  The lanes column
@@ -18,7 +20,7 @@ covers the cross-instance ``solve_many`` axis.  The shards column
 (``solver.solve(shards=2)`` -> ``core.shard``): the frontier split
 across vmapped shard lanes with work donation — the shard-health
 counters (donations, donated rows, idle shard-steps, peak occupancy)
-land in the same ``COUNTERS`` table.  On CPU the pallas rows run in
+land in the same tracker scope.  On CPU the pallas rows run in
 interpret mode, so their absolute times measure the interpreter, not
 the kernel — the dispatch/sync counts and the bit-for-bit width/
 expanded parity asserts are what carry; wall-clock becomes meaningful on
@@ -31,8 +33,7 @@ real TPU hardware.
 """
 from __future__ import annotations
 
-from repro.core import engine as engine_lib
-from repro.core import solver
+from repro.core import solver, telemetry
 
 from .common import SUITE_FAST, SUITE_FULL, Timer, emit, get_instance
 
@@ -66,12 +67,14 @@ def run(full: bool = False, quick: bool = False, pallas: bool = True,
         g = get_instance(key)
         per_combo = {}
         for backend, engine, lanes, shards in combos:
-            engine_lib.reset_counters()
+            # fresh detached tracker per measurement: isolates this run's
+            # counters from the process-global accounting
+            tr = telemetry.Tracker()
             with Timer() as t:
                 res = solver.solve(g, cap=cap, block=block, engine=engine,
                                    backend=backend, schedule="doubling",
-                                   lanes=lanes, shards=shards)
-            c = dict(engine_lib.COUNTERS)
+                                   lanes=lanes, shards=shards, tracker=tr)
+            c = {k: int(tr[k]) for k in telemetry.LEGACY_KEYS}
             ok = (want is None) or (res.width == want)
             per_combo[(backend, engine, lanes, shards)] = \
                 (res, c, t.seconds, ok)

@@ -17,7 +17,7 @@ def main() -> None:
 
     print("# table1: general benchmark (paper Table 1)", flush=True)
     from . import table1_general
-    table1_general.run(full=full)
+    table1_general.run(full=full, json_path="BENCH_solver.json")
 
     print("# engine_sync: fused vs host-loop engine (dispatches + syncs)",
           flush=True)
@@ -34,6 +34,11 @@ def main() -> None:
     from . import serve_throughput
     serve_throughput.run(full=full, quick=not full,
                          lanes=8 if full else 4)
+
+    print("# serve_load: open-loop arrival trace vs the persistent "
+          "service (submit->done latency percentiles)", flush=True)
+    from . import serve_load
+    serve_load.run(quick=not full)
 
     print("# shard_scaling: intra-request scale-out (sharded frontier "
           "vs sequential)", flush=True)

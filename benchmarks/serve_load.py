@@ -1,0 +1,125 @@
+"""Open-loop load driver for the persistent solve service (twserved).
+
+The serve/shard benches measure closed-loop throughput (submit
+everything, drain); a *service* is judged under open-loop load — requests
+arrive on a fixed schedule whether or not the pool has caught up, and the
+number that matters is the submit→done latency distribution, tails
+included.  This driver replays a fixed arrival trace (a deterministic
+interleave of Table-1 instances at a constant inter-arrival gap — no
+randomness, so runs are comparable across PRs) against an **embedded**
+``TwServer`` over its real TCP wire, then reads each request's
+submit→done latency from the service's own telemetry: the per-request
+scope snapshots returned by the ``metrics`` wire op carry a
+``request_s`` timing stamped at the terminal event, and ``admission_s``
+(queue wait) splits out the shaping delay.
+
+Printed per run: p50/p95/p99 submit→done latency, mean admission wait,
+pool-level dispatch/sync totals — and every result is parity-asserted
+against a sequential ``solver.solve`` of the same instance, so the
+driver doubles as an end-to-end wire correctness check.
+
+    python -m benchmarks.serve_load               # fast trace (16 reqs)
+    python -m benchmarks.serve_load --quick       # CI-sized (8 reqs)
+    python -m benchmarks.serve_load --jsonl serve_load_metrics.jsonl
+
+``--jsonl PATH`` streams the service's raw telemetry mutation log
+(``telemetry.JsonlSink`` attached to the pool scope) for offline
+analysis; CI uploads it as an artifact.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import solver
+from repro.launch.twserved import TwServer
+from repro.serve.client import TwClient
+
+from .common import Timer, emit, get_instance
+
+# deterministic arrival traces: (instance key, arrival offset seconds)
+_MIX = ["myciel3", "petersen", "desargues", "petersen"]
+TRACE = [(_MIX[i % len(_MIX)], 0.10 * i) for i in range(16)]
+TRACE_QUICK = [(_MIX[i % len(_MIX)], 0.05 * i) for i in range(8)]
+
+
+def _pct(xs, q):
+    """Nearest-rank percentile of a non-empty list."""
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(round(q / 100.0 * (len(ys) - 1))))]
+
+
+def run(quick: bool = False, lanes: int = 4, block: int = 1 << 10,
+        jsonl_path: str = None):
+    trace = TRACE_QUICK if quick else TRACE
+    keys = sorted({k for k, _t in trace})
+    refs = {k: solver.solve(get_instance(k), block=block) for k in keys}
+
+    srv = TwServer(port=0, lanes=lanes, block=block,
+                   metrics_jsonl=jsonl_path)
+    srv.start()
+    c = TwClient(port=srv.port)
+    try:
+        # open-loop replay: submit at each arrival offset regardless of
+        # how far the pool has fallen behind
+        rids = []
+        t0 = time.monotonic()
+        for key, offset in trace:
+            lag = t0 + offset - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            rids.append((key, c.submit(key)))
+        with Timer() as t_drain:
+            results = {rid: c.result(rid) for _k, rid in rids}
+
+        # parity: the wire + scheduler are pure transport/scheduling
+        for key, rid in rids:
+            ref, res = refs[key], results[rid]
+            assert (ref.width, ref.exact, ref.expanded) == \
+                (res["width"], res["exact"], res["expanded"]), \
+                (key, rid, res, ref)
+
+        # latency percentiles from the service's own metrics snapshots
+        m = c.metrics()
+        snaps = {int(r): s for r, s in m["requests"].items()}
+        lat = [snaps[rid]["timings"]["request_s"]["total_s"]
+               for _k, rid in rids]
+        adm = [snaps[rid]["timings"]["admission_s"]["total_s"]
+               for _k, rid in rids if "admission_s" in snaps[rid]["timings"]]
+        pool = m["pool"]["counters"]
+    finally:
+        srv.close()
+
+    p50, p95, p99 = _pct(lat, 50), _pct(lat, 95), _pct(lat, 99)
+    wall = time.monotonic() - t0
+    print(f"serve_load: {len(trace)} requests over {trace[-1][1]:.2f}s "
+          f"arrivals, {lanes} lanes", flush=True)
+    print(f"  submit->done latency  p50={p50 * 1e3:.1f}ms  "
+          f"p95={p95 * 1e3:.1f}ms  p99={p99 * 1e3:.1f}ms", flush=True)
+    print(f"  admission wait mean   "
+          f"{(sum(adm) / max(len(adm), 1)) * 1e3:.1f}ms", flush=True)
+    print(f"  pool totals           dispatches={int(pool['dispatches'])} "
+          f"host_syncs={int(pool['host_syncs'])} "
+          f"reqs_done={int(pool.get('reqs_done', 0))}", flush=True)
+    print(f"  wall {wall:.2f}s (drain {t_drain.seconds:.2f}s); "
+          f"parity=exact", flush=True)
+    emit("serve_load/latency", p50,
+         f"p50_s={p50:.4f};p95_s={p95:.4f};p99_s={p99:.4f};"
+         f"n={len(trace)};lanes={lanes};"
+         f"dispatches={int(pool['dispatches'])};parity=exact")
+    if jsonl_path:
+        print(f"-> wrote {jsonl_path}", flush=True)
+    return dict(p50_s=p50, p95_s=p95, p99_s=p99, n=len(trace),
+                lanes=lanes, wall_s=wall,
+                dispatches=int(pool["dispatches"]),
+                host_syncs=int(pool["host_syncs"]))
+
+
+if __name__ == "__main__":
+    import sys
+    jsonl_path = None
+    if "--jsonl" in sys.argv:
+        jsonl_path = sys.argv[sys.argv.index("--jsonl") + 1]
+    lanes = 4
+    if "--lanes" in sys.argv:
+        lanes = int(sys.argv[sys.argv.index("--lanes") + 1])
+    run(quick="--quick" in sys.argv, lanes=lanes, jsonl_path=jsonl_path)

@@ -52,9 +52,14 @@ trajectory across PRs.
 """
 from __future__ import annotations
 
-from repro.core import batch, engine as engine_lib, solver
+from repro.core import batch, solver, telemetry
 from repro.core import bitset, frontier
 from repro.serve.twscheduler import TwScheduler
+
+
+def _counters(tr) -> dict:
+    """The legacy-shaped counter dict for one measurement's tracker."""
+    return {k: int(tr[k]) for k in telemetry.LEGACY_KEYS}
 
 from .common import Timer, emit, get_instance
 
@@ -82,25 +87,26 @@ def run(full: bool = False, quick: bool = False, lanes: int = 8,
     rows = {}
 
     # per-request baseline: fixed worst-case cap, one solve per request
-    engine_lib.reset_counters()
+    # (each mode gets a fresh detached tracker — isolated measurement)
+    tr_seq = telemetry.Tracker()
     with Timer() as t_seq:
-        seq = [solver.solve(g, cap=batch.DEFAULT_CAP, block=block)
+        seq = [solver.solve(g, cap=batch.DEFAULT_CAP, block=block,
+                            tracker=tr_seq)
                for g in gs]
     n_max = max(g.n for g in gs)
     seq_pool = frontier.frontier_bytes(batch.DEFAULT_CAP,
                                        bitset.n_words(n_max))
-    rows["sequential"] = (t_seq.seconds, dict(engine_lib.COUNTERS),
-                         seq_pool, seq)
+    rows["sequential"] = (t_seq.seconds, _counters(tr_seq), seq_pool, seq)
 
     # the service: continuous batching + plan_capacity-sized lane pool
-    engine_lib.reset_counters()
-    sched = TwScheduler(lanes=lanes, block=block)
+    tr_srv = telemetry.Tracker()
+    sched = TwScheduler(lanes=lanes, block=block, tracker=tr_srv)
     rids = [sched.submit(g) for g in gs]
     with Timer() as t_srv:
         done = sched.run()
     srv = [done[r] for r in rids]
     srv_pool = sched.pool_bytes()
-    rows[f"service={lanes}"] = (t_srv.seconds, dict(engine_lib.COUNTERS),
+    rows[f"service={lanes}"] = (t_srv.seconds, _counters(tr_srv),
                                 srv_pool, srv)
 
     for mode, (secs, c, pool, results) in rows.items():
@@ -169,8 +175,8 @@ def run_overlap(keys, gs, seq, *, lanes: int, block: int):
 
     # async overlap: the burst lands while dispatch 1 is in flight and is
     # admitted immediately (host bookkeeping under the flying device)
-    engine_lib.reset_counters()
-    overlap = TwScheduler(lanes=lanes, block=block)
+    tr = telemetry.Tracker()
+    overlap = TwScheduler(lanes=lanes, block=block, tracker=tr)
     events = {}
 
     def submit(g):
@@ -187,7 +193,7 @@ def run_overlap(keys, gs, seq, *, lanes: int, block: int):
         if launched:
             overlap.sync()
         done = overlap.run()
-    c = dict(engine_lib.COUNTERS)
+    c = _counters(tr)
 
     late_adm = [next(e["round"] for e in events[r] if e["event"] ==
                      "admitted") for r in rids[half:]]
@@ -239,12 +245,13 @@ def run_pipeline(keys, gs, seq, *, lanes: int, block: int):
     sequential ``solver.solve``."""
     records, stats = [], {}
     for depth in (1, 2):
-        engine_lib.reset_counters()
-        sched = TwScheduler(lanes=lanes, block=block, pipeline=depth)
+        tr = telemetry.Tracker()
+        sched = TwScheduler(lanes=lanes, block=block, pipeline=depth,
+                            tracker=tr)
         rids = [sched.submit(g) for g in gs]
         with Timer() as t:
             done = sched.run()
-        c = dict(engine_lib.COUNTERS)
+        c = _counters(tr)
         for key, ref, rid in zip(keys, seq, rids):
             res = done[rid]
             assert (ref.width, ref.exact, ref.expanded, ref.per_k) == \
@@ -296,14 +303,14 @@ def run_shards(*, lanes: int, block: int, quick: bool = False):
 
     records, done_rounds = [], {}
     for s in (1, 4):
-        engine_lib.reset_counters()
-        sched = TwScheduler(lanes=lanes, block=block)
+        tr = telemetry.Tracker()
+        sched = TwScheduler(lanes=lanes, block=block, tracker=tr)
         evs = []
         with Timer() as t:
             rid_h = sched.submit(heavy, shards=s, on_event=evs.append)
             rids = [sched.submit(g) for g in smalls]
             done = sched.run()
-        c = dict(engine_lib.COUNTERS)
+        c = _counters(tr)
         done_rounds[s] = next(e["rounds"] for e in evs
                               if e["event"] == "done")
         rh = done[rid_h]

@@ -12,7 +12,7 @@ cost/benefit, never a search-quality trade.
 On CPU the vmapped shard lanes execute serially, so wall-clock speedup
 is flat-to-negative here; the numbers that carry are the shard-health
 counters (donations, donated rows, idle shard-steps, peak per-shard
-occupancy — ``repro.core.engine.COUNTERS``) showing the rebalancer
+occupancy — a per-measurement ``telemetry.Tracker``) showing the rebalancer
 keeping the lanes busy.  Wall-clock becomes meaningful on real
 accelerators where the lanes map onto hardware parallelism.
 
@@ -26,8 +26,7 @@ can archive the trajectory next to ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
-from repro.core import engine as engine_lib
-from repro.core import solver
+from repro.core import solver, telemetry
 
 from .common import Timer, emit, get_instance
 
@@ -53,10 +52,10 @@ def run(full: bool = False, quick: bool = False, block: int = 1 << 10,
     print(header, flush=True)
     for key, want in suite:
         g = get_instance(key)
-        engine_lib.reset_counters()
+        tr0 = telemetry.Tracker()
         with Timer() as t0:
-            ref = solver.solve(g, block=block)
-        c0 = dict(engine_lib.COUNTERS)
+            ref = solver.solve(g, block=block, tracker=tr0)
+        c0 = {k: int(tr0[k]) for k in telemetry.LEGACY_KEYS}
         assert want is None or ref.width == want, (key, ref.width, want)
         print(f"{key:<12} {1:>6} {ref.width:>3} {t0.seconds:>8.2f} "
               f"{'1.00':>8} {'-':>9} {'-':>8} {'-':>6} {'-':>8}",
@@ -67,10 +66,10 @@ def run(full: bool = False, quick: bool = False, block: int = 1 << 10,
                             wall_s=t0.seconds, speedup=1.0,
                             dispatches=c0["dispatches"]))
         for s in SHARDS:
-            engine_lib.reset_counters()
+            tr = telemetry.Tracker()
             with Timer() as t:
-                res = solver.solve(g, block=block, shards=s)
-            c = dict(engine_lib.COUNTERS)
+                res = solver.solve(g, block=block, shards=s, tracker=tr)
+            c = {k: int(tr[k]) for k in telemetry.LEGACY_KEYS}
             # bit-for-bit parity with the sequential ladder: sharding
             # repartitions the frontier, it never re-expands or prunes
             # differently

@@ -59,6 +59,7 @@ from . import bitset, bloom
 from . import engine as engine_lib
 from . import frontier as frontier_lib
 from . import preprocess as preprocess_lib
+from . import telemetry
 from .graph import Graph
 
 U32 = jnp.uint32
@@ -217,7 +218,8 @@ def decide_lanes_async(lanes: Sequence[Lane], *, cap: Optional[int] = None,
                        n_pad: Optional[int] = None,
                        lane_pad: Optional[int] = None,
                        cap_max: int = DEFAULT_CAP,
-                       budget_bytes=None) -> engine_lib.DispatchHandle:
+                       budget_bytes=None,
+                       tracker=None) -> engine_lib.DispatchHandle:
     """Enqueue one multi-lane dispatch without blocking on its verdicts.
 
     The vmapped program is dispatched (counted) and the per-lane result
@@ -267,15 +269,23 @@ def decide_lanes_async(lanes: Sequence[Lane], *, cap: Optional[int] = None,
         jnp.asarray(targets), fr, n=n_max, cap=cap, block=block, mode=mode,
         use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial)
-    engine_lib.count(dispatches=1)
+    tr = telemetry.get(tracker)
+    tr.count(dispatches=1)
 
     def finalize(host):
         counts_h, exp_h, drop_h = host
-        return [LaneResult(bool(counts_h[i] > 0), bool(drop_h[i] > 0),
-                           int(exp_h[i])) for i in range(live)]
+        out = [LaneResult(bool(counts_h[i] > 0), bool(drop_h[i] > 0),
+                          int(exp_h[i])) for i in range(live)]
+        # per-lane work accounting for the batch layer: how many real
+        # lanes this dispatch decided, the states they expanded, and how
+        # many hit the overflow (inexact) path
+        tr.count(lanes_decided=live,
+                 lane_expanded=sum(r.expanded for r in out),
+                 lane_overflows=sum(1 for r in out if r.inexact))
+        return out
 
     return engine_lib.DispatchHandle((out_fr.count, expanded, dropped),
-                                     finalize)
+                                     finalize, tracker=tr)
 
 
 def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
@@ -285,7 +295,8 @@ def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
                  n_pad: Optional[int] = None,
                  lane_pad: Optional[int] = None,
                  cap_max: int = DEFAULT_CAP,
-                 budget_bytes=None) -> List[LaneResult]:
+                 budget_bytes=None,
+                 tracker=None) -> List[LaneResult]:
     """Decide every lane in one dispatch; one host sync for all verdicts.
 
     ``n_pad`` pins the padded vertex count (callers batching many rounds
@@ -306,7 +317,7 @@ def decide_lanes(lanes: Sequence[Lane], *, cap: Optional[int] = None,
         m_bits=m_bits, k_hashes=k_hashes, schedule=schedule,
         backend=backend, use_simplicial=use_simplicial, n_pad=n_pad,
         lane_pad=lane_pad, cap_max=cap_max,
-        budget_bytes=budget_bytes).result()
+        budget_bytes=budget_bytes, tracker=tracker).result()
 
 
 def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
@@ -314,7 +325,8 @@ def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
                  cap: Optional[int] = None,
                  block: int, mode: str, use_mmw: bool, m_bits: int,
                  k_hashes: int, schedule: str, backend: str = "jax",
-                 use_simplicial: bool = False) -> List[LaneResult]:
+                 use_simplicial: bool = False,
+                 tracker=None) -> List[LaneResult]:
     """Speculative deepening primitive: decide tw(g) <= k for several k in
     one dispatch.
 
@@ -330,7 +342,7 @@ def decide_batch(g: Graph, ks: Sequence[int], clique: Sequence[int] = (),
     return decide_lanes(lanes, cap=cap, block=block, mode=mode,
                         use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
                         schedule=schedule, backend=backend,
-                        use_simplicial=use_simplicial)
+                        use_simplicial=use_simplicial, tracker=tracker)
 
 
 # ----------------------------------------------------------- suite driver
@@ -373,10 +385,15 @@ class InstanceState:
 
     def __init__(self, g: Graph, solver_lib, *, use_preprocess: bool,
                  plan_kw: dict, reconstruct: bool = False,
-                 recon_kw: Optional[dict] = None):
+                 recon_kw: Optional[dict] = None, tracker=None):
         self.g = g
         self.solver = solver_lib
         self.plan_kw = plan_kw
+        # per-request telemetry scope (the serve scheduler passes each
+        # request's child tracker so rung/expanded counts attribute to it
+        # and roll up into the pool totals); NULL here, not the root —
+        # suite drivers opt in explicitly
+        self.tracker = telemetry.NULL if tracker is None else tracker
         self.reconstruct = reconstruct
         self.recon_kw = dict(recon_kw or {})
         self.t0 = time.time()
@@ -545,6 +562,10 @@ class InstanceState:
         run.expanded += res.expanded
         run.per_k[k] = {"feasible": res.feasible, "inexact": res.inexact,
                         "expanded": res.expanded}
+        counts = dict(rungs_decided=1, expanded=res.expanded)
+        if res.inexact:
+            counts["rung_overflows"] = 1
+        self.tracker.count(**counts)
         if res.feasible:
             self.finish_block(k)
             return False

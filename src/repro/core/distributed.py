@@ -45,6 +45,7 @@ from . import bitset, bounds, dedup
 from . import engine as engine_lib
 from . import preprocess as preprocess_lib
 from . import shard as shard_lib
+from . import telemetry
 from .graph import Graph
 from .solver import SolveResult
 
@@ -272,8 +273,8 @@ def decide_launch(g: Graph, k: int, clique, mesh: Mesh, *,
                   schedule: str = "doubling", backend: str = "jax",
                   donate_ratio: Optional[float]
                   = shard_lib.DEFAULT_DONATE_RATIO,
-                  resume: Optional[dict] = None
-                  ) -> engine_lib.DispatchHandle:
+                  resume: Optional[dict] = None,
+                  tracker=None) -> engine_lib.DispatchHandle:
     """Enqueue one fused mesh-sharded decide; return its in-flight handle.
 
     The mesh twin of ``shard.decide_sharded_async``: one dispatch runs the
@@ -316,17 +317,18 @@ def decide_launch(g: Graph, k: int, clique, mesh: Mesh, *,
     feas_dev, drop_dev, exp_dev, stats_dev = fused_fn(
         adj_dev, states, counts, jnp.asarray(k, jnp.int32),
         jnp.asarray(target - start_level, jnp.int32), allowed_dev)
-    engine_lib.count(dispatches=1)
+    tr = telemetry.get(tracker)
+    tr.count(dispatches=1)
 
     def finalize(host):
         feas, drop, exp, stats = host
-        shard_lib._record_stats(stats)
+        shard_lib._record_stats(stats, tracker=tr)
         return [batch_lib.LaneResult(bool(feas),
                                      inexact0 or int(drop) > 0,
                                      expanded0 + int(exp))]
 
     return engine_lib.DispatchHandle(
-        (feas_dev, drop_dev, exp_dev, stats_dev), finalize)
+        (feas_dev, drop_dev, exp_dev, stats_dev), finalize, tracker=tr)
 
 
 def _allowed_words(n: int, clique) -> np.ndarray:
@@ -343,7 +345,8 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
                        checkpoint_cb=None, resume: Optional[dict] = None,
                        engine: str = "fused",
                        donate_ratio: Optional[float]
-                       = shard_lib.DEFAULT_DONATE_RATIO):
+                       = shard_lib.DEFAULT_DONATE_RATIO,
+                       tracker=None):
     """Distributed decision: is tw(g) <= k?  Mirrors solver.decide.
 
     ``engine="fused"`` runs the whole level loop as one device-resident
@@ -351,12 +354,15 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
     syncs until the verdict.  Per-level checkpointing needs host snapshots,
     so a ``checkpoint_cb`` forces the host loop.  ``donate_ratio`` tunes
     the per-level work donation (None disables it)."""
+    tr = telemetry.get(tracker)
     if engine == "fused" and checkpoint_cb is None:
-        res = decide_launch(
-            g, k, clique, mesh, cap_local=cap_local, block=block,
-            use_mmw=use_mmw, use_simplicial=use_simplicial,
-            schedule=schedule, backend=backend, donate_ratio=donate_ratio,
-            resume=resume).result()[0]
+        with tr.time_block("rung_s"):
+            res = decide_launch(
+                g, k, clique, mesh, cap_local=cap_local, block=block,
+                use_mmw=use_mmw, use_simplicial=use_simplicial,
+                schedule=schedule, backend=backend,
+                donate_ratio=donate_ratio, resume=resume,
+                tracker=tr).result()[0]
         return res.feasible, res.inexact, res.expanded
 
     backend_lib.validate(backend, mode="sort", schedule=schedule,
@@ -388,15 +394,18 @@ def decide_distributed(g: Graph, k: int, clique: list, mesh: Mesh, *,
 
     for level in range(start_level, target):
         counts_h = np.asarray(counts)
-        engine_lib.count(host_syncs=1)
+        tr.count(host_syncs=1)
         expanded += int(counts_h.sum())              # states popped this level
-        states, counts, dropped, stats = level_fn(
-            adj_dev, states, counts, kdev, allowed_dev)
-        engine_lib.count(dispatches=1)
-        inexact |= int(jnp.sum(dropped)) > 0
-        total = int(jnp.sum(counts))
-        engine_lib.count(host_syncs=2)
-        shard_lib._record_stats(np.asarray(stats))
+        with tr.time_block("level_s"):
+            states, counts, dropped, stats = level_fn(
+                adj_dev, states, counts, kdev, allowed_dev)
+            tr.count(dispatches=1)
+            inexact |= int(jnp.sum(dropped)) > 0
+            total = int(jnp.sum(counts))
+            tr.count(host_syncs=2)
+        # frontier occupancy across the mesh vs the planned local capacity
+        tr.gauge_max("frontier_peak_rows", total)
+        shard_lib._record_stats(np.asarray(stats), tracker=tr)
         if checkpoint_cb is not None:
             checkpoint_cb(dict(level=level + 1, k=k, expanded=expanded,
                                inexact=inexact,
@@ -443,7 +452,8 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                       engine: str = "fused",
                       donate_ratio: Optional[float]
                       = shard_lib.DEFAULT_DONATE_RATIO,
-                      impl: Optional[str] = None) -> SolveResult:
+                      impl: Optional[str] = None,
+                      tracker=None) -> SolveResult:
     """Distributed analogue of solver.solve (width only, no reconstruction)."""
     t0 = time.time()
     if impl is not None:
@@ -482,7 +492,7 @@ def solve_distributed(g: Graph, mesh: Mesh, *, cap_local: int = 1 << 14,
                 use_mmw=use_mmw, use_simplicial=use_simplicial,
                 schedule=schedule, backend=backend,
                 checkpoint_cb=checkpoint_cb, engine=engine,
-                donate_ratio=donate_ratio)
+                donate_ratio=donate_ratio, tracker=tracker)
             expanded += exp
             any_inexact |= inexact
             if verbose:

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable
 
 import numpy as np
@@ -44,6 +45,7 @@ import jax.numpy as jnp
 from . import backend as backend_lib
 from . import dedup
 from . import frontier as frontier_lib
+from . import telemetry
 
 U32 = jnp.uint32
 
@@ -52,27 +54,28 @@ U32 = jnp.uint32
 #   host_syncs — device->host scalar/buffer reads that block on the device
 # plus shard-health counters fed by the sharded engine (core.shard /
 # core.distributed): donation events/rows, idle-shard level steps, and the
-# peak per-shard occupancy seen (a max, not a sum)
-COUNTERS = {
-    "dispatches": 0,
-    "host_syncs": 0,
-    "shard_donations": 0,
-    "shard_donated_rows": 0,
-    "shard_idle_steps": 0,
-    "shard_peak_occupancy": 0,
-}
+# peak per-shard occupancy seen (a max, not a sum).
+#
+# Accounting lives in ``core.telemetry`` now (thread-safe, scoped,
+# pluggable sinks — DESIGN.md §14); ``COUNTERS`` survives as a deprecated
+# read-only view over the root tracker so historical asserts keep working.
+COUNTERS = telemetry.COUNTERS
 
 
 def reset_counters():
-    for key in COUNTERS:
-        COUNTERS[key] = 0
+    """Deprecated: zero the process-root tracker (``telemetry.reset``)."""
+    telemetry.reset()
 
 
 def count(dispatches: int = 0, host_syncs: int = 0, **extra: int):
-    COUNTERS["dispatches"] += dispatches
-    COUNTERS["host_syncs"] += host_syncs
-    for key, val in extra.items():
-        COUNTERS[key] += val
+    """Deprecated shim: count on the process-root tracker.  Library code
+    now threads an explicit ``tracker=`` instead."""
+    kw = dict(extra)
+    if dispatches:
+        kw["dispatches"] = dispatches
+    if host_syncs:
+        kw["host_syncs"] = host_syncs
+    telemetry.root().count(**kw)
 
 
 @dataclasses.dataclass
@@ -98,8 +101,10 @@ class DispatchHandle:
     """
     arrays: Any                     # pytree of in-flight device arrays
     finalize: Callable[[Any], Any]  # host values -> caller-shaped result
+    tracker: Any = None             # telemetry scope (None = process root)
     _result: Any = None
     _done: bool = False
+    _t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     def ready(self) -> bool:
         """Has the device finished?  Never blocks (best-effort: arrays
@@ -108,10 +113,13 @@ class DispatchHandle:
                    for a in jax.tree_util.tree_leaves(self.arrays))
 
     def result(self):
-        """Block for the verdict: one host sync, then cached."""
+        """Block for the verdict: one host sync, then cached.  The sync
+        and the launch→result wall-clock land on the handle's tracker."""
         if not self._done:
             host = jax.device_get(self.arrays)
-            count(host_syncs=1)
+            tr = telemetry.get(self.tracker)
+            tr.count(host_syncs=1)
+            tr.timing("dispatch_wall_s", time.perf_counter() - self._t0)
             self._result = self.finalize(host)
             self.arrays = None       # release the device references
             self._done = True
@@ -345,7 +353,7 @@ _fused_decide = functools.partial(
 def fused_decide_launch(adj_dev, allowed_dev, k: int, target, *, n, cap,
                         block, mode, use_mmw, m_bits, k_hashes, schedule,
                         backend="jax", use_simplicial=False, fr=None,
-                        max_levels=None) -> DispatchHandle:
+                        max_levels=None, tracker=None) -> DispatchHandle:
     """Enqueue one fused decide; return its in-flight ``DispatchHandle``.
 
     The program is dispatched (counted) but the host does NOT wait: the
@@ -370,7 +378,8 @@ def fused_decide_launch(adj_dev, allowed_dev, k: int, target, *, n, cap,
         adj_dev, allowed_dev, kdev, tdev, fr, n=n, cap=cap, block=block,
         mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial)
-    count(dispatches=1)
+    tr = telemetry.get(tracker)
+    tr.count(dispatches=1)
 
     def finalize(host):
         states_h, count_h, expanded_h, dropped_h = host
@@ -382,12 +391,13 @@ def fused_decide_launch(adj_dev, allowed_dev, k: int, target, *, n, cap,
         return feasible, inexact, int(expanded_h), fr_host
 
     return DispatchHandle((fr.states, fr.count, expanded, dropped),
-                          finalize)
+                          finalize, tracker=tr)
 
 
 def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
                  mode, use_mmw, m_bits, k_hashes, schedule, backend="jax",
-                 use_simplicial=False, fr=None, max_levels=None):
+                 use_simplicial=False, fr=None, max_levels=None,
+                 tracker=None):
     """Host entry point: one dispatch, one sync, full verdict.
 
     ``fr`` seeds the frontier (defaults to the DP root {∅}); ``max_levels``
@@ -404,4 +414,4 @@ def fused_decide(adj_dev, allowed_dev, k: int, target, *, n, cap, block,
         adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
         mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial,
-        fr=fr, max_levels=max_levels).result()
+        fr=fr, max_levels=max_levels, tracker=tracker).result()

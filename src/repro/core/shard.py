@@ -49,6 +49,7 @@ from . import backend as backend_lib
 from . import bitset, bloom, dedup
 from . import engine as engine_lib
 from . import frontier as frontier_lib
+from . import telemetry
 from .graph import Graph
 
 U32 = jnp.uint32
@@ -250,12 +251,12 @@ _sharded_decide = functools.partial(
 
 # ------------------------------------------------------------ host wrappers
 
-def _record_stats(stats_h) -> None:
+def _record_stats(stats_h, tracker=None) -> None:
     ev, moved, idle, peak = (int(x) for x in stats_h)
-    engine_lib.count(shard_donations=ev, shard_donated_rows=moved,
-                     shard_idle_steps=idle)
-    engine_lib.COUNTERS["shard_peak_occupancy"] = max(
-        engine_lib.COUNTERS["shard_peak_occupancy"], peak)
+    tr = telemetry.get(tracker)
+    tr.count(shard_donations=ev, shard_donated_rows=moved,
+             shard_idle_steps=idle)
+    tr.gauge_max("shard_peak_occupancy", peak)
 
 
 def decide_sharded_async(g: Graph, k: int, clique=(), *, shards: int,
@@ -268,8 +269,8 @@ def decide_sharded_async(g: Graph, k: int, clique=(), *, shards: int,
                          use_simplicial: bool = False,
                          donate_ratio: Optional[float] = None,
                          n_pad: Optional[int] = None,
-                         budget_bytes: Optional[int] = None
-                         ) -> engine_lib.DispatchHandle:
+                         budget_bytes: Optional[int] = None,
+                         tracker=None) -> engine_lib.DispatchHandle:
     """Enqueue one sharded decide rung; return its ``DispatchHandle``.
 
     ``handle.result()`` yields a one-element list holding a
@@ -315,7 +316,8 @@ def decide_sharded_async(g: Graph, k: int, clique=(), *, shards: int,
         return dist_lib.decide_launch(
             g, k, clique, mesh, cap_local=cap, block=block,
             use_mmw=use_mmw, use_simplicial=use_simplicial,
-            schedule=schedule, backend=backend, donate_ratio=ratio)
+            schedule=schedule, backend=backend, donate_ratio=ratio,
+            tracker=tracker)
 
     n_static = n if n_pad is None else int(n_pad)
     if n_static < n:
@@ -339,16 +341,17 @@ def decide_sharded_async(g: Graph, k: int, clique=(), *, shards: int,
         use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
         schedule=schedule, backend=backend, use_simplicial=use_simplicial,
         donate_ratio=ratio)
-    engine_lib.count(dispatches=1)
+    tr = telemetry.get(tracker)
+    tr.count(dispatches=1)
 
     def finalize(host):
         counts_h, expanded_h, dropped_h, stats_h = host
-        _record_stats(stats_h)
+        _record_stats(stats_h, tracker=tr)
         return [batch_lib.LaneResult(int(np.sum(counts_h)) > 0,
                                      int(dropped_h) > 0, int(expanded_h))]
 
     return engine_lib.DispatchHandle((counts, expanded, dropped, stats),
-                                     finalize)
+                                     finalize, tracker=tr)
 
 
 def decide_sharded(g: Graph, k: int, clique=(), **kw):

@@ -34,6 +34,7 @@ from . import bitset, bloom, bounds, dedup, engine as engine_lib
 from . import frontier as frontier_lib
 from . import expand
 from . import preprocess as preprocess_lib
+from . import telemetry
 from .graph import Graph
 
 U32 = jnp.uint32
@@ -87,14 +88,16 @@ def _pow2_at_least(x: int) -> int:
 def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
               *, n: int, cap: int, block: int, mode: str, use_mmw: bool,
               m_bits: int, k_hashes: int, schedule: str,
-              backend: str = "jax", use_simplicial: bool = False):
+              backend: str = "jax", use_simplicial: bool = False,
+              tracker=None):
     """One wavefront level: expand all states in ``fr`` into a new frontier.
 
     Host-loop engine: syncs on ``fr.count`` to size the chunk loop (the
     fused engine in ``core.engine`` keeps this loop on device)."""
+    tr = telemetry.get(tracker)
     w = fr.w
     count = int(fr.count)
-    engine_lib.count(host_syncs=1)
+    tr.count(host_syncs=1)
     # adaptive block: early levels / small instances have tiny frontiers —
     # a fixed 1024-row block pays full padding cost per chunk (§Perf iter).
     # Rounding to powers of two bounds the number of jit signatures at
@@ -122,18 +125,22 @@ def run_level(adj_dev, fr: frontier_lib.Frontier, k: int, allowed_dev,
             use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
             schedule=schedule, backend=backend,
             use_simplicial=use_simplicial)
-        engine_lib.count(dispatches=1)
+        tr.count(dispatches=1)
 
     if mode == "sort" and n_chunks > 1:
         out, ocount, drop2 = _final_dedup(out, ocount, cap)
         # cross-chunk duplicates removed; drops before dedup stay counted
         dropped = dropped + drop2
-        engine_lib.count(dispatches=1)
+        tr.count(dispatches=1)
 
     new_fr = frontier_lib.Frontier(out, ocount, dropped)
     stats = LevelStats(expanded=count, generated=int(ocount),
                        dropped=int(dropped))
-    engine_lib.count(host_syncs=2)
+    tr.count(host_syncs=2)
+    # occupancy vs the planned capacity: how full the frontier buffer
+    # actually got (the host loop sees every level, so this is the true
+    # per-level peak; compare against the ``frontier_cap`` gauge)
+    tr.gauge_max("frontier_peak_rows", stats.generated)
     return new_fr, stats
 
 
@@ -151,7 +158,7 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
            mode: str, use_mmw: bool, m_bits: int, k_hashes: int,
            schedule: str, backend: str = "jax",
            use_simplicial: bool = False, keep_levels: bool = False,
-           engine: str = "fused") -> DecideResult:
+           engine: str = "fused", tracker=None) -> DecideResult:
     """Is tw(g) <= k?  (Monte-Carlo 'no' possible in bloom mode / overflow.)
 
     ``engine="fused"`` runs the whole level/chunk recursion as one compiled
@@ -164,6 +171,7 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
     backend_lib.validate(backend, mode=mode, schedule=schedule,
                          use_mmw=use_mmw, use_simplicial=use_simplicial,
                          m_bits=m_bits)
+    tr = telemetry.get(tracker)
     n = g.n
     target = n - max(k + 1, len(clique))
     if target <= 0:
@@ -183,11 +191,16 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
         engine_lib.validate_geometry(cap, block, adaptive=True)
 
     if engine == "fused":
-        feasible, inexact, expanded, _fr = engine_lib.fused_decide(
-            adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
-            mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
-            schedule=schedule, backend=backend,
-            use_simplicial=use_simplicial)
+        with tr.time_block("rung_s"):
+            feasible, inexact, expanded, _fr = engine_lib.fused_decide(
+                adj_dev, allowed_dev, k, target, n=n, cap=cap, block=block,
+                mode=mode, use_mmw=use_mmw, m_bits=m_bits, k_hashes=k_hashes,
+                schedule=schedule, backend=backend,
+                use_simplicial=use_simplicial, tracker=tr)
+        # the fused loop only surfaces the final frontier, so this is a
+        # lower bound on the true per-level peak (the host loop's gauge
+        # sees every level)
+        tr.gauge_max("frontier_peak_rows", int(_fr.count))
         return DecideResult(feasible, inexact, expanded, None)
 
     fr = frontier_lib.empty_frontier(cap, w)
@@ -195,19 +208,20 @@ def decide(g: Graph, k: int, clique: list, *, cap: int, block: int,
     inexact = False
     levels = [frontier_lib.to_host(fr)] if keep_levels else None
 
-    for _level in range(target):
-        fr, stats = run_level(adj_dev, fr, k, allowed_dev, n=n, cap=cap,
-                              block=block, mode=mode, use_mmw=use_mmw,
-                              m_bits=m_bits, k_hashes=k_hashes,
-                              schedule=schedule, backend=backend,
-                              use_simplicial=use_simplicial)
-        expanded += stats.expanded
-        inexact |= stats.dropped > 0
-        if keep_levels:
-            levels.append(frontier_lib.to_host(fr))
-        engine_lib.count(host_syncs=1)
-        if int(fr.count) == 0:
-            return DecideResult(False, inexact, expanded, levels)
+    with tr.time_block("rung_s"):
+        for _level in range(target):
+            fr, stats = run_level(adj_dev, fr, k, allowed_dev, n=n, cap=cap,
+                                  block=block, mode=mode, use_mmw=use_mmw,
+                                  m_bits=m_bits, k_hashes=k_hashes,
+                                  schedule=schedule, backend=backend,
+                                  use_simplicial=use_simplicial, tracker=tr)
+            expanded += stats.expanded
+            inexact |= stats.dropped > 0
+            if keep_levels:
+                levels.append(frontier_lib.to_host(fr))
+            tr.count(host_syncs=1)
+            if int(fr.count) == 0:
+                return DecideResult(False, inexact, expanded, levels)
     return DecideResult(True, inexact, expanded, levels)
 
 
@@ -348,7 +362,8 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
                 verbose: bool, backend: str = "jax",
                 use_simplicial: bool = False,
                 engine: str = "fused", lanes: int = 1, shards: int = 1,
-                donate_ratio: Optional[float] = None) -> SolveResult:
+                donate_ratio: Optional[float] = None,
+                tracker=None) -> SolveResult:
     """Iterative deepening on one (biconnected) block.
 
     ``cap=None`` right-sizes the frontier buffer for this block with
@@ -375,6 +390,7 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
     ``_certify`` pattern).  ``shards=1`` is exactly the unsharded path
     (no wrapper, no counter drift)."""
     t0 = time.time()
+    tr = telemetry.get(tracker)
     plan = plan_block(g, use_clique=use_clique, use_paths=use_paths,
                       start_k=start_k)
     if plan.result is not None:
@@ -382,6 +398,9 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
     if cap is None:
         from . import batch as batch_lib
         cap = batch_lib.plan_capacity(g.n, block=block)
+    # planned capacity for this block — read it against the
+    # ``frontier_peak_rows`` high-watermark the engines ratchet
+    tr.gauge("frontier_cap", cap)
 
     shard_n = max(1, int(shards))
     if shard_n > 1 and engine != "fused":
@@ -400,20 +419,31 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
         ks = list(range(k, min(k + spec, plan.ub)))
         if shard_n > 1:
             from . import shard as shard_lib
-            results = [shard_lib.decide_sharded(
-                plan.graph_at(ks[0]), ks[0], plan.clique, shards=shard_n,
-                donate_ratio=donate_ratio, **decide_kw)]
+            with tr.time_block("rung_s"):
+                results = [shard_lib.decide_sharded(
+                    plan.graph_at(ks[0]), ks[0], plan.clique,
+                    shards=shard_n, donate_ratio=donate_ratio,
+                    tracker=tr, **decide_kw)]
         elif spec > 1:
             from . import batch as batch_lib
-            results = batch_lib.decide_batch(
-                g, ks, plan.clique,
-                graphs=[plan.graph_at(kk) for kk in ks], **decide_kw)
+            with tr.time_block("rung_s"):
+                results = batch_lib.decide_batch(
+                    g, ks, plan.clique,
+                    graphs=[plan.graph_at(kk) for kk in ks],
+                    tracker=tr, **decide_kw)
         else:
             results = [decide(plan.graph_at(ks[0]), ks[0], plan.clique,
                               keep_levels=reconstruct, engine=engine,
-                              **decide_kw)]
+                              tracker=tr, **decide_kw)]
         for kk, res in zip(ks, results):
             expanded_total += res.expanded
+            # per-rung accounting, mirroring ``batch.InstanceState.feed``
+            # so a solo solve and a served request report the same
+            # rung-level counters
+            counts = dict(rungs_decided=1, expanded=res.expanded)
+            if res.inexact:
+                counts["rung_overflows"] = 1
+            tr.count(**counts)
             per_k[kk] = {"feasible": res.feasible, "inexact": res.inexact,
                          "expanded": res.expanded}
             if verbose:
@@ -430,7 +460,7 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
                         # ``_certify`` pattern — expanded stays the ladder's)
                         levels = decide(plan.graph_at(kk), kk, plan.clique,
                                         keep_levels=True, engine="host",
-                                        **decide_kw).levels
+                                        tracker=tr, **decide_kw).levels
                     order = reconstruct_order(plan.graph_at(kk), kk,
                                               plan.clique, levels)
                 return SolveResult(kk, plan.exact_at(kk, any_inexact),
@@ -492,7 +522,7 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
           backend: str = "jax", use_simplicial: bool = False,
           engine: str = "fused", lanes: int = 1, shards: int = 1,
           donate_ratio: Optional[float] = None,
-          impl: Optional[str] = None) -> SolveResult:
+          impl: Optional[str] = None, tracker=None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
     ``cap`` bounds the frontier buffer (rows per level).  The default
@@ -541,7 +571,8 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
                     use_clique=use_clique, use_paths=use_paths,
                     start_k=start_k, verbose=verbose, backend=backend,
                     use_simplicial=use_simplicial, engine=engine,
-                    lanes=lanes, shards=shards, donate_ratio=donate_ratio)
+                    lanes=lanes, shards=shards, donate_ratio=donate_ratio,
+                    tracker=tracker)
     if not use_preprocess:
         return solve_block(g, reconstruct=reconstruct, **solve_kw)
 

@@ -24,7 +24,16 @@ per line:
                                     event ({"event": "done" | "cancelled" | "error"})
     {"op": "result", "rid": 0}   -> blocks -> {"ok": true, "result": {"width": ...}}
     {"op": "cancel", "rid": 0}   -> {"ok": true, "cancelled": true}
+    {"op": "metrics"}            -> {"ok": true, "pool": {...}, "requests": {...}}
+    {"op": "metrics", "rid": 0}  -> same, "requests" filtered to rid 0
     {"op": "shutdown"}           -> {"ok": true}  (drains in-flight, exits)
+
+``metrics`` returns the scheduler's scoped telemetry snapshot
+(``TwScheduler.metrics``): pool-level counters/gauges/timings plus the
+per-request child scopes — live requests snapshotted in place, finished
+ones as frozen at their terminal event.  ``--metrics-jsonl PATH``
+additionally streams every telemetry record (one JSON line each) to a
+file for offline analysis.
 
 Traffic shaping (DESIGN.md §12): ``--max-queue`` bounds the admission
 queue — an over-limit submit is *rejected*, not queued::
@@ -155,10 +164,18 @@ class TwServer:
     """
 
     def __init__(self, *, host: str = "127.0.0.1", port: int = DEFAULT_PORT,
-                 keep_results: int = DEFAULT_KEEP_RESULTS, **sched_kw):
+                 keep_results: int = DEFAULT_KEEP_RESULTS,
+                 metrics_jsonl=None, **sched_kw):
+        from repro.core import telemetry
         from repro.serve.twscheduler import TwScheduler
 
         self.sched = TwScheduler(**sched_kw)
+        self._metrics_sink = None
+        if metrics_jsonl is not None:
+            # stream every telemetry record of this pool's scope tree
+            # (pool + per-request children) as JSON lines
+            self._metrics_sink = telemetry.JsonlSink(metrics_jsonl)
+            self.sched.tracker.add_sink(self._metrics_sink)
         self.keep_results = max(1, int(keep_results))
         self._logs: Dict[int, _EventLog] = {}
         self._logs_lock = threading.Lock()   # _logs map + eviction vs readers
@@ -207,6 +224,8 @@ class TwServer:
         self._tcp.server_close()
         if self._driver is not None:
             self._driver.join(timeout=30)
+        if self._metrics_sink is not None:
+            self._metrics_sink.close()
 
     def serve_until_shutdown(self) -> None:
         """Block the calling thread until a shutdown request arrives."""
@@ -260,6 +279,7 @@ class TwServer:
                 term.pop(rid, None)
                 sched.done.pop(rid, None)
                 sched.errors.pop(rid, None)
+                sched.req_metrics.pop(rid, None)
                 self._logs.pop(rid, None)
 
     def _reader(self, rid: int) -> _EventLog:
@@ -307,6 +327,9 @@ class TwServer:
             _send(wfile, {"ok": True, "rid": rid})
         elif op == "status":
             _send(wfile, {"ok": True, **self.sched.status(_rid(msg))})
+        elif op == "metrics":
+            rid = int(msg["rid"]) if msg.get("rid") is not None else None
+            _send(wfile, {"ok": True, **self.sched.metrics(rid)})
         elif op == "cancel":
             cancelled = self.sched.cancel(_rid(msg))
             with self._wake:
@@ -421,6 +444,11 @@ def main(argv=None):
                     default=DEFAULT_KEEP_RESULTS,
                     help="finished requests retained for status/result/"
                          "stream replay before the oldest are evicted")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append every telemetry record of the pool's "
+                         "scope tree to PATH as JSON lines (the metrics "
+                         "op returns snapshots; this streams the raw "
+                         "mutation log)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -433,6 +461,7 @@ def main(argv=None):
     try:
         srv = TwServer(host=args.host, port=args.port,
                        keep_results=args.keep_results,
+                       metrics_jsonl=args.metrics_jsonl,
                        lanes=args.lanes,
                        cap=args.cap, block=args.block, mode=args.mode,
                        use_mmw=args.mmw, use_simplicial=args.simplicial,

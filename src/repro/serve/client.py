@@ -16,6 +16,7 @@ Wire operations (see ``repro.launch.twserved`` for the server side):
                                    terminal event (done/cancelled/error)
   {"op": "result", "rid": 0}    -> blocks, then {"ok": true, "result": {...}}
   {"op": "cancel", "rid": 0}                        -> {"ok": true, "cancelled": true}
+  {"op": "metrics"}             -> {"ok": true, "pool": {...}, "requests": {...}}
   {"op": "shutdown"}                                -> {"ok": true}
 
 Runnable example (start a server first, e.g.
@@ -172,6 +173,20 @@ class TwClient:
             yield ev
             if ev.get("event") in ("done", "cancelled", "error"):
                 return
+
+    def metrics(self, rid: Optional[int] = None) -> dict:
+        """The server's scoped telemetry snapshot
+        (``TwScheduler.metrics``): ``pool`` carries the pool scope's
+        counters/gauges/timings, ``requests`` maps rid -> that request's
+        child-scope snapshot (live requests as of now, finished ones as
+        frozen at their terminal event).  ``rid`` filters ``requests``
+        to one request."""
+        req = {"op": "metrics"}
+        if rid is not None:
+            req["rid"] = int(rid)
+        resp = self._rpc(req)
+        resp.pop("ok", None)
+        return resp
 
     def ping(self) -> bool:
         try:

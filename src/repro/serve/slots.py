@@ -48,6 +48,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core import telemetry
+
 
 class QueueFull(RuntimeError):
     """The admission queue is at ``max_queue``: shed this submit.
@@ -100,7 +102,8 @@ class SlotPool:
 
     def __init__(self, n_slots: int, *, max_queue: Optional[int] = None,
                  prio_weight: int = 4,
-                 slots_of: Optional[Callable[[object], int]] = None):
+                 slots_of: Optional[Callable[[object], int]] = None,
+                 tracker=None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot (got {n_slots})")
         if max_queue is not None and max_queue < 1:
@@ -109,6 +112,9 @@ class SlotPool:
         self.max_queue = max_queue
         self.prio_weight = max(1, int(prio_weight))
         self.slots_of = slots_of
+        # Pool-level queue mechanics telemetry; NULL (no-op) unless the
+        # owning scheduler hands us its pool tracker.
+        self.tracker = telemetry.NULL if tracker is None else tracker
         self._queues: Dict[int, deque] = {}   # priority class -> FIFO
         self._starve = 0   # consecutive preferential pops while base waits
 
@@ -119,10 +125,13 @@ class SlotPool:
 
     def submit(self, item, priority: int = 0) -> None:
         if self.max_queue is not None and self.qsize >= self.max_queue:
+            self.tracker.count(queue_rejections=1)
             raise QueueFull(
                 f"admission queue full ({self.qsize} queued, "
                 f"max_queue={self.max_queue}); retry later")
         self._queues.setdefault(int(priority), deque()).append(item)
+        self.tracker.count(queue_submits=1)
+        self.tracker.gauge("queue_depth", self.qsize)
 
     @property
     def qsize(self) -> int:
@@ -217,6 +226,9 @@ class SlotPool:
             for j in free[1:need]:
                 self.slots[j] = _Shadow(primary)
             admitted.append((primary, state))
+        if admitted:
+            self.tracker.count(admissions=len(admitted))
+        self.tracker.gauge("queue_depth", self.qsize)
         return admitted
 
     def release(self, i: int) -> None:

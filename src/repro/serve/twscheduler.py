@@ -110,6 +110,7 @@ persistent process and ``repro.serve.client`` for its client)::
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 import warnings
@@ -121,9 +122,16 @@ from repro.core import engine as engine_lib
 from repro.core import frontier as frontier_lib
 from repro.core import shard as shard_lib
 from repro.core import solver as solver_lib
+from repro.core import telemetry
 from repro.core.graph import Graph
 
 from .slots import QueueFull, SlotPool
+
+# Each scheduler instance gets a uniquely-scoped pool tracker (child of
+# the process root unless the caller supplies one): test suites build
+# many pools per process, and sharing one "pool" scope would merge
+# their counters.
+_POOL_SEQ = itertools.count()
 
 
 @dataclasses.dataclass
@@ -160,6 +168,12 @@ class SolveRequest:
     priority: int = 0
     deadline: Optional[float] = None
     on_event: Optional[Callable[[dict], None]] = None
+    # set by the scheduler at submit/admission (not caller knobs):
+    # per-request telemetry child scope, submit instant (admission
+    # latency), and the round count at admission (rounds-per-request)
+    tracker: object = None
+    t_submit: float = 0.0
+    round_admitted: int = 0
 
 
 # the per-request overridable knobs (subset of decide_kw keys)
@@ -238,7 +252,7 @@ class TwScheduler:
                  cap_max: int = batch.DEFAULT_CAP, budget_bytes=None,
                  max_queue: Optional[int] = None, prio_weight: int = 4,
                  pipeline: int = 1, donate_ratio: Optional[float] = None,
-                 verbose: bool = False):
+                 verbose: bool = False, tracker=None):
         if schedule is None:
             schedule = "doubling" if backend == "pallas" else "while"
         backend_lib.validate(backend, mode=mode, schedule=schedule,
@@ -248,9 +262,17 @@ class TwScheduler:
             budget_bytes = backend_lib.device_memory_budget()
         if pipeline < 1:
             raise ValueError(f"pipeline depth must be >= 1 (got {pipeline})")
+        # pool-scope telemetry: every dispatch/queue/request counter this
+        # scheduler records lands here (and rolls up to the supplied
+        # parent / the process root); per-request child scopes hang off
+        # this tracker so a request's counters sum exactly into it
+        if tracker is None:
+            tracker = telemetry.root().child(f"pool{next(_POOL_SEQ)}")
+        self.tracker = tracker
         self.pool = SlotPool(int(lanes), max_queue=max_queue,
                              prio_weight=prio_weight,
-                             slots_of=lambda r: getattr(r, "shards", 1))
+                             slots_of=lambda r: getattr(r, "shards", 1),
+                             tracker=self.tracker)
         self.cap = cap
         self.donate_ratio = donate_ratio
         self.cap_max = cap_max
@@ -267,6 +289,10 @@ class TwScheduler:
         self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
         self.errors: Dict[int, str] = {}        # rid -> admission error
         self.terminal: Dict[int, str] = {}      # rid -> TERMINAL_STATES
+        # rid -> terminal telemetry snapshot of the request's child scope
+        # (taken at the terminal event, then the child is detached — its
+        # contributions stay in the pool totals)
+        self.req_metrics: Dict[int, dict] = {}
         self.rounds = 0                          # scheduler steps launched
         self.idle_syncs = 0      # syncs that left the device with no round
         self.covered_syncs = 0   # syncs covered by a pipelined next round
@@ -367,6 +393,8 @@ class TwScheduler:
                     "live or finished request")
             self._next_rid = max(self._next_rid, rid) + 1
             req.rid = rid
+            req.tracker = self.tracker.child(f"req{rid}")
+            req.t_submit = time.monotonic()
             self._prog[rid] = [0, max(0, g.n - 1), 0]
             self.pool.submit(req, priority=req.priority)
         return rid
@@ -406,6 +434,10 @@ class TwScheduler:
         try:
             self._emit(req, {"event": "admitted", "name": req.g.name,
                              "round": self.rounds + 1})
+            req.round_admitted = self.rounds
+            if req.tracker is not None and req.t_submit:
+                req.tracker.timing("admission_s",
+                                   time.monotonic() - req.t_submit)
             if req.deadline is not None and \
                     time.monotonic() >= req.deadline:
                 # expired while queued: resolve with what is known now
@@ -420,7 +452,8 @@ class TwScheduler:
             inst = batch.InstanceState(
                 req.g, solver_lib, use_preprocess=self.use_preprocess,
                 plan_kw=dict(start_k=req.start_k, **self.plan_kw),
-                reconstruct=req.reconstruct, recon_kw=self._recon_kw(req))
+                reconstruct=req.reconstruct, recon_kw=self._recon_kw(req),
+                tracker=req.tracker)
         except Exception as e:    # noqa: BLE001 — per-request isolation
             self._fail(req, e)
             return None
@@ -435,15 +468,39 @@ class TwScheduler:
         return dict(cap=req.cap if req.cap is not None else self.cap,
                     cap_max=self.cap_max, **self._effective_kw(req))
 
+    def _close_request(self, req: SolveRequest) -> Optional[dict]:
+        """Terminal telemetry: stamp the rounds-per-request gauge, take
+        the request child scope's final snapshot (retained in
+        ``req_metrics`` and attached to the terminal event), then detach
+        the child — its counts stay in the pool totals (write-through),
+        so a drained pool's request snapshots still sum to the pool
+        scope.  Returns None when the request never got a child scope
+        (e.g. a hand-built ``SolveRequest`` fed straight to the pool)."""
+        tr = req.tracker
+        if tr is None or isinstance(tr, telemetry.NullTracker):
+            return None
+        tr.gauge("rounds", max(0, self.rounds - req.round_admitted))
+        if req.t_submit:
+            # submit -> terminal latency: what an open-loop load driver
+            # reads its percentiles from (benchmarks/serve_load.py)
+            tr.timing("request_s", time.monotonic() - req.t_submit)
+        snap = tr.snapshot()
+        self.req_metrics[req.rid] = snap
+        self.tracker.drop_child(f"req{req.rid}")
+        return snap
+
     def _finish(self, req: SolveRequest, inst: batch.InstanceState):
         r = inst.result
         self.done[req.rid] = r
         self.terminal[req.rid] = "done"
+        self.tracker.count(reqs_done=1)
+        snap = self._close_request(req)
         prog = self._prog.pop(req.rid, [0, max(0, req.g.n - 1), 0])
         lb = max(prog[0], r.width if r.exact else r.lb)
         self._emit(req, {"event": "done", "width": r.width,
                          "exact": r.exact, "lb": lb, "ub": r.width,
-                         "expanded": r.expanded, "rounds": self.rounds},
+                         "expanded": r.expanded, "rounds": self.rounds,
+                         "metrics": snap},
                    prog=prog)
         if self.verbose:
             print(f"[twserve] req {req.rid} ({req.g.name}): width={r.width}"
@@ -455,8 +512,11 @@ class TwScheduler:
         msg = f"{type(err).__name__}: {err}"
         self.errors[req.rid] = msg
         self.terminal[req.rid] = "error"
+        self.tracker.count(reqs_error=1)
+        snap = self._close_request(req)
         prog = self._prog.pop(req.rid, [0, 0, 0])
-        self._emit(req, {"event": "error", "error": msg}, prog=prog)
+        self._emit(req, {"event": "error", "error": msg, "metrics": snap},
+                   prog=prog)
         if self.verbose:
             print(f"[twserve] req {req.rid} ({getattr(req.g, 'name', '?')})"
                   f" failed at admission: {msg}", flush=True)
@@ -467,11 +527,14 @@ class TwScheduler:
         ``timed_out`` — a timed-out request returns bounds, not nothing."""
         self.done[req.rid] = res
         self.terminal[req.rid] = "timeout"
+        self.tracker.count(reqs_timeout=1)
+        snap = self._close_request(req)
         prog = self._prog.pop(req.rid, [res.lb, res.ub, 0])
         self._emit(req, {"event": "done", "width": res.width,
                          "exact": False, "timed_out": True, "lb": res.lb,
                          "ub": res.ub, "expanded": res.expanded,
-                         "rounds": self.rounds}, prog=prog)
+                         "rounds": self.rounds, "metrics": snap},
+                   prog=prog)
         if self.verbose:
             print(f"[twserve] req {req.rid} ({req.g.name}): deadline "
                   f"expired, anytime lb={res.lb} ub={res.ub}", flush=True)
@@ -499,9 +562,12 @@ class TwScheduler:
                             break
                 if req is not None:
                     self.terminal[rid] = "cancelled"
+                    self.tracker.count(reqs_cancelled=1)
+                    snap = self._close_request(req)
                     prog = self._prog.pop(rid, [0, 0, 0])
                     self._emit(req, {"event": "cancelled", "lb": prog[0],
-                                     "ub": prog[1], "rounds": self.rounds},
+                                     "ub": prog[1], "rounds": self.rounds,
+                                     "metrics": snap},
                                prog=prog)
                     ok = True
                     if self.verbose:
@@ -600,6 +666,33 @@ class TwScheduler:
                 return {"state": "queued"}
             return {"state": "unknown"}
 
+    def metrics(self, rid: Optional[int] = None) -> dict:
+        """Scoped telemetry snapshot (thread-safe): the pool scope's
+        totals plus per-request snapshots — live and queued requests
+        snapshotted in place, finished ones from the snapshot retained
+        at their terminal event.  With ``rid`` only that request is
+        included (empty ``requests`` for unknown rids).  Because request
+        child scopes write through to the pool scope, the rung-level
+        counters of the ``requests`` snapshots sum exactly into
+        ``pool["counters"]``; the front end's ``metrics`` wire op
+        returns exactly this dict."""
+        with self._lock:
+            requests = dict(self.req_metrics)
+            live = list(self.pool.queued()) + \
+                [req for _i, (req, _inst) in self.pool.active()]
+            for req in live:
+                tr = req.tracker
+                if tr is not None and \
+                        not isinstance(tr, telemetry.NullTracker):
+                    requests[req.rid] = tr.snapshot()
+            if rid is not None:
+                requests = {rid: requests[rid]} if rid in requests else {}
+            return {"pool": self.tracker.snapshot(children=False),
+                    "rounds": self.rounds, "queued": self.pool.qsize,
+                    "idle_syncs": self.idle_syncs,
+                    "covered_syncs": self.covered_syncs,
+                    "requests": requests}
+
     # ----------------------------------------------------------- the engine
 
     def launch(self) -> bool:
@@ -690,9 +783,13 @@ class TwScheduler:
                     # dispatches (lane axis padded to the full pool so
                     # the steady state reuses one compiled program)
                     for lo in range(0, len(lanes), L):
+                        # a shared vmapped dispatch serves many requests,
+                        # so its dispatch/host-sync counts are pool-level
+                        # (the per-rung expanded counts are attributed to
+                        # requests at feed time, via InstanceState)
                         handle = batch.decide_lanes_async(
                             lanes[lo:lo + L], cap=cap, n_pad=self._n_pad,
-                            lane_pad=L, **kw)
+                            lane_pad=L, tracker=self.tracker, **kw)
                         handles.append((handle, metas[lo:lo + L]))
                 for meta in sharded:
                     i, req, inst, run, kk, name = meta
@@ -705,10 +802,15 @@ class TwScheduler:
                             [batch.Lane(run.plan.graph_at(kk), kk,
                                         tuple(run.plan.clique))],
                             n_dispatch, width=req.shards)
+                    # a sharded dispatch runs one request's rung alone, so
+                    # its dispatch count and donation/occupancy stats are
+                    # attributable — they land in the request's child
+                    # scope and roll up to the pool totals
                     handle = shard_lib.decide_sharded_async(
                         run.plan.graph_at(kk), kk, tuple(run.plan.clique),
                         shards=req.shards, cap=cap, n_pad=self._n_pad,
-                        donate_ratio=self.donate_ratio, **kw)
+                        donate_ratio=self.donate_ratio,
+                        tracker=req.tracker or self.tracker, **kw)
                     # one-element metas: the handle finalizes to a single
                     # LaneResult, so sync()'s zip feeds it like any lane
                     handles.append((handle, [meta]))
@@ -800,6 +902,7 @@ class TwScheduler:
             dt = time.monotonic() - t_launch
             self._round_s = dt if self._round_s is None else \
                 0.7 * self._round_s + 0.3 * dt
+            self.tracker.timing("round_s", dt)
             if self._rounds:
                 self.covered_syncs += 1    # the device already has work
             else:

@@ -1,0 +1,188 @@
+"""Tracker scoping through the solve service: per-request child scopes
+sum exactly into the pool scope (the write-through invariant), across
+the full traffic-shaping matrix — plain streams, cancellation, deadline
+preemption, and sharded scale-out — and over the wire via the twserved
+``metrics`` op.
+
+The reconciliation keys are the rung-attributed counters (``expanded``,
+``rungs_decided``, ``rung_overflows``): they are only ever counted
+through a request's ``InstanceState.feed`` (or its sharded dispatches),
+so the sum over request snapshots must equal the pool totals exactly —
+discarded verdicts (cancelled / preempted / overshot rungs) are counted
+in neither.
+"""
+import pytest
+
+from repro.core import graph, telemetry
+from repro.core.telemetry import Tracker
+from repro.serve.twscheduler import TwScheduler
+
+BLOCK = 32
+FAST = dict(cap=1 << 12, block=BLOCK)
+
+RECON_KEYS = ("expanded", "rungs_decided", "rung_overflows")
+
+
+def _reconcile(m):
+    """Assert the per-request snapshots sum exactly into the pool scope
+    on every rung-attributed counter."""
+    pool = m["pool"]["counters"]
+    for key in RECON_KEYS:
+        total = sum(s["counters"].get(key, 0)
+                    for s in m["requests"].values())
+        assert total == pool.get(key, 0), \
+            (key, total, pool.get(key, 0), m)
+
+
+def test_request_scopes_sum_to_pool_totals():
+    sched = TwScheduler(lanes=2, tracker=Tracker(), **FAST)
+    rids = [sched.submit(g) for g in (graph.petersen(), graph.myciel(3),
+                                      graph.petersen())]
+    done = sched.run()
+    assert set(done) == set(rids)
+    m = sched.metrics()
+    assert set(m["requests"]) == set(rids)
+    assert m["pool"]["counters"]["expanded"] > 0
+    _reconcile(m)
+    # each terminal snapshot carries the rounds-per-request gauge and the
+    # submit->done latency timing
+    for snap in m["requests"].values():
+        assert "rounds" in snap["gauges"]
+        assert snap["timings"]["request_s"]["calls"] == 1
+
+
+def test_done_event_metrics_match_retained_snapshot():
+    events = []
+    sched = TwScheduler(lanes=2, tracker=Tracker(), **FAST)
+    rid = sched.submit(graph.petersen(), on_event=events.append)
+    sched.run()
+    done_ev = next(e for e in events if e["event"] == "done")
+    assert done_ev["metrics"] == sched.req_metrics[rid]
+    assert done_ev["metrics"]["counters"]["expanded"] == \
+        sched.done[rid].expanded
+
+
+def test_cancelled_requests_reconcile():
+    # one request cancelled while queued (lanes=1 serialises admission),
+    # one cancelled mid-flight, one surviving
+    sched = TwScheduler(lanes=1, tracker=Tracker(), **FAST)
+    evs = {}
+
+    def sub(g):
+        lst = []
+        rid = sched.submit(g, on_event=lst.append)
+        evs[rid] = lst
+        return rid
+
+    r_live = sub(graph.petersen())
+    r_fly = sub(graph.petersen())
+    r_queued = sub(graph.myciel(3))
+    assert sched.launch()              # r_live's rung goes in flight
+    assert sched.cancel(r_queued)      # dropped from the queue
+    sched.sync()
+    # r_fly is admitted by now (lanes=1: as soon as r_live finishes) or
+    # still queued; cancel it wherever it is
+    sched.cancel(r_fly)
+    sched.run()
+    assert sched.terminal[r_queued] == "cancelled"
+    assert sched.terminal[r_fly] == "cancelled"
+    assert sched.terminal[r_live] == "done"
+    m = sched.metrics()
+    _reconcile(m)
+    # cancelled requests still report their terminal per-request metrics
+    for rid in (r_queued, r_fly):
+        assert rid in m["requests"]
+        cancel_ev = next(e for e in evs[rid] if e["event"] == "cancelled")
+        assert cancel_ev["metrics"] == sched.req_metrics[rid]
+    # the queued cancel never ran a rung
+    assert m["requests"][r_queued]["counters"].get("rungs_decided", 0) == 0
+
+
+def test_deadline_preempted_requests_reconcile():
+    events = []
+    sched = TwScheduler(lanes=2, tracker=Tracker(), **FAST)
+    r_dead = sched.submit(graph.myciel(3), deadline_s=0.0,
+                          on_event=events.append)
+    r_live = sched.submit(graph.petersen())
+    done = sched.run()
+    assert sched.terminal[r_dead] == "timeout"
+    assert sched.terminal[r_live] == "done"
+    assert not done[r_dead].exact
+    m = sched.metrics()
+    _reconcile(m)
+    ev = next(e for e in events if e["event"] == "done")
+    assert ev["timed_out"] is True
+    assert ev["metrics"] == sched.req_metrics[r_dead]
+
+
+def test_sharded_request_reconciles_and_attributes_dispatches():
+    sched = TwScheduler(lanes=4, tracker=Tracker(), **FAST)
+    r_shard = sched.submit(graph.myciel(3), shards=2)
+    r_small = sched.submit(graph.petersen())
+    done = sched.run()
+    assert done[r_shard].exact and done[r_small].exact
+    m = sched.metrics()
+    _reconcile(m)
+    # a sharded dispatch serves exactly one request, so its dispatch
+    # count is attributed to that request's scope (shared vmapped
+    # dispatches stay pool-level: the small request's scope counts none)
+    shard_snap = m["requests"][r_shard]
+    assert shard_snap["counters"].get("dispatches", 0) > 0
+    assert m["requests"][r_small]["counters"].get("dispatches", 0) == 0
+    assert m["pool"]["counters"]["dispatches"] >= \
+        shard_snap["counters"]["dispatches"]
+
+
+def test_pool_scope_isolated_per_scheduler():
+    """Two schedulers in one process must not merge counters — each
+    default pool tracker is a uniquely-scoped child of the root."""
+    a = TwScheduler(lanes=1, **FAST)
+    b = TwScheduler(lanes=1, **FAST)
+    assert a.tracker is not b.tracker
+    assert a.tracker.scope != b.tracker.scope
+    ra = a.submit(graph.petersen())
+    a.run()
+    assert a.metrics()["pool"]["counters"]["expanded"] > 0
+    assert b.metrics()["pool"]["counters"].get("expanded", 0) == 0
+    assert ra in a.metrics()["requests"]
+    assert a.metrics()["requests"] and not b.metrics()["requests"]
+
+
+def test_metrics_rid_filter():
+    sched = TwScheduler(lanes=2, tracker=Tracker(), **FAST)
+    r0 = sched.submit(graph.petersen())
+    r1 = sched.submit(graph.petersen())
+    sched.run()
+    m = sched.metrics(rid=r0)
+    assert set(m["requests"]) == {r0}
+    assert sched.metrics(rid=10_000)["requests"] == {}
+    assert set(sched.metrics()["requests"]) == {r0, r1}
+
+
+def test_metrics_op_over_the_wire():
+    """The twserved ``metrics`` op returns the scheduler snapshot as
+    plain JSON, reconciling over the wire (rids stringify in JSON)."""
+    twserved = pytest.importorskip("repro.launch.twserved")
+    from repro.serve.client import TwClient
+
+    srv = twserved.TwServer(port=0, lanes=2, **FAST)
+    srv.start()
+    try:
+        c = TwClient(port=srv.port)
+        rid = c.submit("petersen")
+        r_cancel = c.submit("myciel4", priority=-1)
+        res = c.result(rid)
+        c.cancel(r_cancel)
+        m = c.metrics()
+        pool = m["pool"]["counters"]
+        for key in RECON_KEYS:
+            total = sum(s["counters"].get(key, 0)
+                        for s in m["requests"].values())
+            assert total == pool.get(key, 0), (key, m)
+        snap = m["requests"][str(rid)]
+        assert snap["counters"]["expanded"] == res["expanded"]
+        only = c.metrics(rid=rid)["requests"]
+        assert set(only) == {str(rid)}
+    finally:
+        c.shutdown()
+        srv.serve_until_shutdown()
