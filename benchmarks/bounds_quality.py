@@ -1,0 +1,147 @@
+"""Anytime bounds-engine quality bench (DESIGN.md §15).
+
+Two measurements per Table-1 instance:
+
+  * **exact-rung reduction** — the same forced full ladder
+    (``start_k=0``, so every instance climbs from rung 0) served with the
+    improver lanes off vs on.  The verdict must be identical (heuristics
+    only ever tighten); the payoff is fewer decided Held-Karp rungs —
+    a tightened lb skips refuted rungs, a width-matching elimination
+    order certifies the top of the ladder without running it.
+  * **ub-lb gap vs time** — bounds-only serving (``heuristic_only``):
+    the monotone trajectory of (t, lb, ub) from the request's ``bounds``
+    events, its final gap, and whether the improvers closed it
+    (``exact = (lb == ub)``).
+
+The run asserts what CI needs: every clamped verdict matches its
+baseline, every heuristic bound sandwiches the known exact width, and at
+least one instance finishes with strictly fewer exact rungs.
+
+    python -m benchmarks.bounds_quality                # fast suite
+    python -m benchmarks.bounds_quality --quick        # CI-sized suite
+    python -m benchmarks.bounds_quality --full
+    python -m benchmarks.bounds_quality --json BENCH_bounds.json
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import telemetry
+from repro.serve.twscheduler import TwScheduler
+
+from .common import Timer, emit, get_instance
+
+# (key, exact tw) — the forced-full-ladder clamp runs; modest ladders so
+# the fast tier stays CI-sized
+SUITE = [("petersen", 4), ("myciel3", 5), ("desargues", 6)]
+SUITE_QUICK = [("petersen", 4), ("myciel3", 5)]
+SUITE_FULL = SUITE + [("queen5_5", 18)]
+
+# (key, exact tw) — bounds-only serving targets: graphs whose exact
+# ladder is out of the fast tier's reach are exactly where the gap
+# trajectory matters
+HSUITE = [("mcgee", 7), ("dyck", 7)]
+HSUITE_QUICK = [("mcgee", 7)]
+HSUITE_FULL = HSUITE + [("grid6x6", 6), ("queen6_6", 25)]
+
+ROUNDS = 8          # improver budget per request
+FAST = dict(cap=1 << 12, block=32)
+
+
+def _ladder(key, want, *, heuristics):
+    g = get_instance(key)
+    tr = telemetry.Tracker()
+    sched = TwScheduler(lanes=1, pipeline=2, heuristics=heuristics,
+                        tracker=tr, **FAST)
+    rid = sched.submit(g, start_k=0)
+    with Timer() as t:
+        res = sched.run()[rid]
+    c = tr.snapshot()["counters"]
+    assert res.width == want, (key, res.width, want)
+    return res, t.seconds, c
+
+
+def run(full: bool = False, quick: bool = False, json_path: str = None):
+    suite = SUITE_FULL if full else (SUITE_QUICK if quick else SUITE)
+    hsuite = HSUITE_FULL if full else (HSUITE_QUICK if quick else HSUITE)
+    records = []
+
+    print(f"{'instance':<12} {'tw':>3} {'rungs_off':>9} {'rungs_on':>8} "
+          f"{'skipped':>7} {'ub_moves':>8} {'lb_moves':>8} {'wall_on_s':>9}",
+          flush=True)
+    for key, want in suite:
+        ref, t_off, c_off = _ladder(key, want, heuristics=0)
+        res, t_on, c_on = _ladder(key, want, heuristics=ROUNDS)
+        # parity: the bounds engine may only tighten, never change
+        assert (res.width, res.exact) == (ref.width, ref.exact), (key, res)
+        rungs_off = int(c_off.get("rungs_decided", 0))
+        rungs_on = int(c_on.get("rungs_decided", 0))
+        assert rungs_on <= rungs_off, (key, rungs_on, rungs_off)
+        rec = dict(instance=key, mode="exact_clamp", tw=res.width,
+                   exact=res.exact, rungs_off=rungs_off,
+                   rungs_on=rungs_on,
+                   rungs_skipped=int(c_on.get("exact_rungs_skipped", 0)),
+                   heur_ub_improvements=int(
+                       c_on.get("heur_ub_improvements", 0)),
+                   heur_lb_improvements=int(
+                       c_on.get("heur_lb_improvements", 0)),
+                   wall_off_s=t_off, wall_on_s=t_on)
+        records.append(rec)
+        print(f"{key:<12} {res.width:>3} {rungs_off:>9} {rungs_on:>8} "
+              f"{rec['rungs_skipped']:>7} "
+              f"{rec['heur_ub_improvements']:>8} "
+              f"{rec['heur_lb_improvements']:>8} {t_on:>9.2f}", flush=True)
+        emit(f"bounds_quality/{key}/clamp", t_on,
+             f"tw={res.width};rungs={rungs_off}->{rungs_on};"
+             f"skipped={rec['rungs_skipped']}")
+    clamped = [r for r in records if r["rungs_on"] < r["rungs_off"]]
+    assert clamped, "no instance finished with strictly fewer exact rungs"
+    print(f"-> {len(clamped)}/{len(records)} instances decided strictly "
+          f"fewer exact rungs with the bounds engine on", flush=True)
+
+    print(f"\n{'instance':<12} {'tw':>3} {'lb':>3} {'ub':>3} {'gap':>4} "
+          f"{'exact':>5} {'moves':>5} {'wall_s':>7}", flush=True)
+    for key, want in hsuite:
+        g = get_instance(key)
+        sched = TwScheduler(lanes=1, **FAST)
+        traj = []
+        t0 = time.time()
+        rid = sched.submit(g, heuristic_only=True, heuristics=ROUNDS,
+                           seed=1,
+                           on_event=lambda ev: traj.append(
+                               (time.time() - t0, ev.get("lb"),
+                                ev.get("ub")))
+                           if ev.get("event") == "bounds" else None)
+        with Timer() as t:
+            res = sched.run()[rid]
+        # the heuristic bounds must sandwich the known exact width
+        assert res.lb <= want <= res.ub, (key, res.lb, res.ub, want)
+        assert res.exact == (res.lb == res.ub)
+        rec = dict(instance=key, mode="heuristic_only", tw=want,
+                   lb=res.lb, ub=res.ub, gap=res.ub - res.lb,
+                   exact=res.exact, wall_s=t.seconds,
+                   trajectory=[dict(t_s=round(ts, 4), lb=lb, ub=ub)
+                               for ts, lb, ub in traj])
+        records.append(rec)
+        print(f"{key:<12} {want:>3} {res.lb:>3} {res.ub:>3} "
+              f"{rec['gap']:>4} {str(res.exact):>5} {len(traj):>5} "
+              f"{t.seconds:>7.2f}", flush=True)
+        emit(f"bounds_quality/{key}/heuristic_only", t.seconds,
+             f"tw={want};lb={res.lb};ub={res.ub};gap={rec['gap']}")
+
+    if json_path:
+        import json as json_lib
+        with open(json_path, "w") as f:
+            json_lib.dump({"bench": "bounds_quality", "rounds": ROUNDS,
+                           "records": records}, f, indent=2)
+        print(f"-> wrote {json_path}", flush=True)
+    return records
+
+
+if __name__ == "__main__":
+    import sys
+    json_path = None
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
+    run(full="--full" in sys.argv, quick="--quick" in sys.argv,
+        json_path=json_path)

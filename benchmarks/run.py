@@ -45,6 +45,11 @@ def main() -> None:
     from . import shard_scaling
     shard_scaling.run(full=full, quick=not full)
 
+    print("# bounds_quality: anytime heuristic bounds engine (rung "
+          "reduction + ub-lb gap vs time)", flush=True)
+    from . import bounds_quality
+    bounds_quality.run(full=full, quick=not full)
+
     print("# table2: work-size x memory sweep (paper Tables 2/3)",
           flush=True)
     from . import table2_worksize

@@ -577,6 +577,45 @@ class InstanceState:
             return False
         return True
 
+    def improve_bounds(self, lb: Optional[int] = None,
+                       ub: Optional[int] = None,
+                       ub_order: Optional[list] = None) -> dict:
+        """Clamp anytime heuristic bounds into the current block's ladder
+        (``core.bounds_engine`` improvers; monotone tighten only).
+
+        A tighter ub (with its replayable order certificate) shortens the
+        remaining ladder; a tighter lb skips rungs the minor argument has
+        already refuted — ``run.k`` jumps forward and the skipped rungs
+        are never dispatched, exactly as if ``plan_block`` had known the
+        bound at admission.  Neither side can change the final verdict:
+        when the clamped ladder closes (``run.k >= plan.ub``) the block
+        resolves through the same ``finish_block(None)`` path the
+        exhausted ladder uses, with both sides certificate-backed.
+        Returns ``{lb_improved, ub_improved, rungs_skipped, finished}``
+        (``finished`` = the whole *instance* resolved); hints without a
+        certificate order, stale hints, and loosenings are ignored."""
+        out = dict(lb_improved=False, ub_improved=False, rungs_skipped=0,
+                   finished=False)
+        run = self.run
+        if run is None or self.result is not None:
+            return out
+        plan = run.plan
+        if ub is not None and ub_order is not None and int(ub) < plan.ub:
+            out["rungs_skipped"] += plan.ub - max(int(ub), run.k)
+            plan.ub = int(ub)
+            plan.ub_order = list(ub_order)
+            out["ub_improved"] = True
+        if lb is not None and int(lb) > plan.lb:
+            plan.lb = min(int(lb), plan.ub)
+            out["lb_improved"] = True
+            if plan.lb > run.k:
+                out["rungs_skipped"] += plan.lb - run.k
+                run.k = plan.lb
+        if run.k >= plan.ub:
+            self.finish_block(None)
+        out["finished"] = self.result is not None
+        return out
+
 
 def solve_many(graphs: Sequence[Graph], *, cap: Optional[int] = None,
                block: int = 1 << 11, mode: str = "sort",

@@ -322,20 +322,36 @@ class BlockPlan:
 
 
 def plan_block(g: Graph, *, use_clique: bool, use_paths: bool,
-               start_k: Optional[int]) -> BlockPlan:
+               start_k: Optional[int], heuristics: int = 0,
+               seed: int = 0) -> BlockPlan:
     """Bounds + deepening schedule for one block.
 
     ``start_k`` moves the ladder's starting rung but never the *reported*
     lower bound: ``lb`` stays the genuine bound, and a start above it is
     flagged ``forced`` so a feasible verdict at that rung cannot be
-    reported exact (nothing proved ``tw > start_k - 1``)."""
+    reported exact (nothing proved ``tw > start_k - 1``).
+
+    ``heuristics > 0`` runs that many anytime improver rounds
+    (``core.bounds_engine``) before scheduling the ladder: a tightened lb
+    raises ``k0`` genuinely (not ``forced`` — the skipped rungs are
+    refuted by a minor argument), a tightened ub shortens the ladder with
+    a replayable order certificate.  ``seed`` pins every heuristic
+    (clique restarts, randomized sweeps, contractions) so the plan is a
+    pure function of ``(g, knobs)``; the defaults reproduce the
+    heuristic-free plan bit-for-bit."""
     if g.n <= 1:
         return BlockPlan(g, [], 0, 0, list(range(g.n)), None, 0, False,
                          SolveResult(0, True, 0, 0, 0, 0.0,
                                      list(range(g.n)), {}))
-    clique = bounds.greedy_max_clique(g) if use_clique else []
-    lb = max(bounds.lower_bound(g), len(clique) - 1)
-    ub, ub_order = bounds.upper_bound(g)
+    clique = bounds.greedy_max_clique(g, seed=seed) if use_clique else []
+    lb = max(bounds.lower_bound(g, seed=seed), len(clique) - 1)
+    ub, ub_order = bounds.upper_bound(g, seed=seed)
+    if heuristics:
+        from . import bounds_engine
+        imp = bounds_engine.improve(g, lb, ub, ub_order,
+                                    rounds=int(heuristics), seed=seed)
+        lb, ub = imp.lb, imp.ub
+        ub_order = imp.ub_order if imp.ub_order is not None else ub_order
     if lb >= ub:
         return BlockPlan(g, clique, lb, ub, ub_order, None, lb, False,
                          SolveResult(ub, True, lb, ub, 0, 0.0, ub_order, {}))
@@ -363,6 +379,7 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
                 use_simplicial: bool = False,
                 engine: str = "fused", lanes: int = 1, shards: int = 1,
                 donate_ratio: Optional[float] = None,
+                heuristics: int = 0, seed: int = 0,
                 tracker=None) -> SolveResult:
     """Iterative deepening on one (biconnected) block.
 
@@ -392,7 +409,7 @@ def solve_block(g: Graph, *, cap: Optional[int], block: int, mode: str,
     t0 = time.time()
     tr = telemetry.get(tracker)
     plan = plan_block(g, use_clique=use_clique, use_paths=use_paths,
-                      start_k=start_k)
+                      start_k=start_k, heuristics=heuristics, seed=seed)
     if plan.result is not None:
         return dataclasses.replace(plan.result, time_sec=time.time() - t0)
     if cap is None:
@@ -522,6 +539,7 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
           backend: str = "jax", use_simplicial: bool = False,
           engine: str = "fused", lanes: int = 1, shards: int = 1,
           donate_ratio: Optional[float] = None,
+          heuristics: int = 0, seed: int = 0,
           impl: Optional[str] = None, tracker=None) -> SolveResult:
     """Compute the treewidth of ``g``.  See module docstring for modes.
 
@@ -547,6 +565,12 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
     workers instead (``core.shard``: single-writer ownership routing,
     threshold work donation tuned by ``donate_ratio``) — bit-identical
     results with S× the aggregate frontier capacity; forces ``lanes=1``.
+    ``heuristics > 0`` runs that many anytime bounds-improver rounds
+    (``core.bounds_engine``) before each block's ladder: an improved lb
+    skips already-refuted rungs, an improved ub clamps the ladder with an
+    order certificate — the reported width/exactness never change, only
+    the number of exact rungs paid for them.  ``seed`` pins every
+    heuristic for bit-reproducible plans.
     ``reconstruct=True`` returns a certified elimination order; with
     preprocessing on, each block is reconstructed with the host engine and
     the block-local orders are stitched back through the preprocess vertex
@@ -572,7 +596,7 @@ def solve(g: Graph, *, cap: Optional[int] = None, block: int = 1 << 11,
                     start_k=start_k, verbose=verbose, backend=backend,
                     use_simplicial=use_simplicial, engine=engine,
                     lanes=lanes, shards=shards, donate_ratio=donate_ratio,
-                    tracker=tracker)
+                    heuristics=heuristics, seed=seed, tracker=tracker)
     if not use_preprocess:
         return solve_block(g, reconstruct=reconstruct, **solve_kw)
 

@@ -87,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
+    ap.add_argument("--heuristics", type=int, default=0, metavar="N",
+                    help="anytime bounds-improver rounds applied at plan "
+                         "time (randomized elimination sweeps + contraction "
+                         "lower bounds, DESIGN.md §15); tightens the ladder, "
+                         "never the verdict")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="pins every heuristic draw (clique restarts, "
+                         "randomized sweeps, contractions)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -149,7 +157,8 @@ def main(argv=None):
             use_preprocess=not args.no_preprocess,
             reconstruct=args.reconstruct, verbose=args.verbose,
             engine=args.engine, lanes=args.batch, shards=args.shards,
-            donate_ratio=args.donate_ratio)
+            donate_ratio=args.donate_ratio,
+            heuristics=args.heuristics, seed=args.seed)
 
     print(f"[solve] treewidth={res.width} exact={res.exact} "
           f"lb={res.lb} ub={res.ub} states_expanded={res.expanded} "

@@ -47,6 +47,15 @@ preempted and resolves with its monotone anytime lb/ub, ``exact`` false,
 ``--pipeline 2`` keeps a second dispatch round in flight so the device
 stays busy across each host sync.
 
+Anytime bounds engine (DESIGN.md §15): ``heuristics`` budgets the
+improver rounds interleaved with a request's exact rungs (``bounds``
+events stream every movement), ``heuristic_only: true`` serves bounds
+without any exact rung — graphs beyond exact-DP reach terminate with
+``exact = (lb == ub)`` — and ``seed`` pins the heuristic draws::
+
+    {"op": "submit", "graph": "mcgee", "heuristic_only": true,
+     "heuristics": 8, "seed": 7}                     -> {"ok": true, "rid": 4}
+
 Architecture: one **driver thread** owns all JAX work and steps the
 scheduler (``launch`` → ``poll_admissions`` → ``sync``); socket threads
 (one per connection, stdlib ``socketserver``) only call the scheduler's
@@ -149,7 +158,8 @@ def _wire_to_graph(msg: dict):
 
 
 _KNOBS = ("reconstruct", "start_k", "mode", "use_mmw", "use_simplicial",
-          "cap", "speculate", "shards", "priority", "deadline_s")
+          "cap", "speculate", "shards", "priority", "deadline_s",
+          "heuristics", "heuristic_only", "seed")
 
 
 class TwServer:

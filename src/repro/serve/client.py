@@ -123,9 +123,14 @@ class TwClient:
         ``Graph`` or a ``core.graph.REGISTRY`` generator name; ``knobs``
         are the per-request overrides (``reconstruct``, ``start_k``,
         ``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
-        ``speculate``, ``shards``, ``priority``, ``deadline_s``).  Raises
-        ``TwServerError`` with ``retry_after`` set when the server shed
-        the submit under backpressure."""
+        ``speculate``, ``shards``, ``priority``, ``deadline_s``,
+        ``heuristics``, ``heuristic_only``, ``seed``).
+        ``heuristic_only=True`` serves anytime bounds without any exact
+        rung — graphs beyond exact-DP reach terminate with
+        ``exact = (lb == ub)``; ``heuristics`` budgets the improver
+        rounds and ``seed`` pins their draws.  Raises ``TwServerError``
+        with ``retry_after`` set when the server shed the submit under
+        backpressure."""
         req = {"op": "submit", **knobs}
         if isinstance(g, str):
             req["graph"] = g

@@ -118,6 +118,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import backend as backend_lib
 from repro.core import batch, bitset, bloom
+from repro.core import bounds_engine
 from repro.core import engine as engine_lib
 from repro.core import frontier as frontier_lib
 from repro.core import shard as shard_lib
@@ -168,6 +169,14 @@ class SolveRequest:
     priority: int = 0
     deadline: Optional[float] = None
     on_event: Optional[Callable[[dict], None]] = None
+    # anytime bounds-engine knobs (core.bounds_engine, DESIGN.md §15):
+    # ``heuristics`` is the improver-round budget (None = pool default),
+    # ``heuristic_only`` serves bounds without any exact rung and
+    # terminates with exact=(lb==ub), ``seed`` pins every heuristic for
+    # bit-reproducible bounds (None = pool seed)
+    heuristics: Optional[int] = None
+    heuristic_only: bool = False
+    seed: Optional[int] = None
     # set by the scheduler at submit/admission (not caller knobs):
     # per-request telemetry child scope, submit instant (admission
     # latency), and the round count at admission (rounds-per-request)
@@ -178,6 +187,11 @@ class SolveRequest:
 
 # the per-request overridable knobs (subset of decide_kw keys)
 _OVERRIDES = ("mode", "use_mmw", "use_simplicial")
+
+# improver-round budget a heuristic_only request falls back to when
+# neither the request nor the pool names one — enough rounds for the
+# randomized improvers to plateau on the Table-1 instances
+DEFAULT_HEURISTIC_ROUNDS = 16
 
 # terminal request states (the value of ``TwScheduler.terminal[rid]``);
 # "done" and "timeout" carry a result in ``done[rid]``, "error" carries a
@@ -252,6 +266,7 @@ class TwScheduler:
                  cap_max: int = batch.DEFAULT_CAP, budget_bytes=None,
                  max_queue: Optional[int] = None, prio_weight: int = 4,
                  pipeline: int = 1, donate_ratio: Optional[float] = None,
+                 heuristics: int = 0, seed: int = 0,
                  verbose: bool = False, tracker=None):
         if schedule is None:
             schedule = "doubling" if backend == "pallas" else "while"
@@ -286,6 +301,13 @@ class TwScheduler:
                               use_simplicial=use_simplicial)
         self.plan_kw = dict(use_clique=use_clique, use_paths=use_paths)
         self.use_preprocess = use_preprocess
+        # anytime bounds engine (DESIGN.md §15): pool-default improver
+        # budget and heuristic seed; per-rid improver rounds launched so
+        # far (launch eligibility — the states themselves enforce their
+        # own termination)
+        self.heuristics = max(0, int(heuristics))
+        self.seed = int(seed)
+        self._heur_rounds: Dict[int, int] = {}
         self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
         self.errors: Dict[int, str] = {}        # rid -> admission error
         self.terminal: Dict[int, str] = {}      # rid -> TERMINAL_STATES
@@ -335,8 +357,20 @@ class TwScheduler:
                shards: int = 1,
                priority: int = 0,
                deadline_s: Optional[float] = None,
-               on_event: Optional[Callable[[dict], None]] = None) -> int:
+               on_event: Optional[Callable[[dict], None]] = None,
+               heuristics: Optional[int] = None,
+               heuristic_only: bool = False,
+               seed: Optional[int] = None) -> int:
         """Queue one solve request; returns its request id.
+
+        ``heuristics`` budgets the anytime bounds-improver rounds the
+        scheduler interleaves with this request's exact rungs (None =
+        pool default; improvements tighten the ladder, never the
+        verdict).  ``heuristic_only=True`` skips the exact DP entirely —
+        the request is served purely by improver rounds (admission stays
+        cheap on graphs beyond exact-DP reach) and terminates with
+        ``exact=(lb == ub)``.  ``seed`` pins every heuristic draw so the
+        streamed ``bounds`` events are bit-reproducible per request.
 
         The keyword subset after ``rid`` is the per-request override
         surface (``SolveRequest``).  An override the pool's backend
@@ -363,12 +397,21 @@ class TwScheduler:
                 f"shards={shards} does not fit the pool "
                 f"({len(self.pool)} slot(s)); a sharded request needs "
                 "shards slots, all from this pool")
+        if heuristic_only and shards > 1:
+            raise ValueError(
+                "heuristic_only=True runs no exact rungs; sharding its "
+                "(nonexistent) frontier across slots is meaningless — "
+                "drop shards or heuristic_only")
         req = SolveRequest(0, g, reconstruct, start_k, mode=mode,
                            use_mmw=use_mmw, use_simplicial=use_simplicial,
                            cap=cap, speculate=max(1, int(speculate)),
                            shards=shards,
                            priority=int(priority), deadline=deadline,
-                           on_event=on_event)
+                           on_event=on_event,
+                           heuristics=(None if heuristics is None
+                                       else max(0, int(heuristics))),
+                           heuristic_only=bool(heuristic_only),
+                           seed=None if seed is None else int(seed))
         kw = self._effective_kw(req)
         backend_lib.validate(kw["backend"], mode=kw["mode"],
                              schedule=kw["schedule"], use_mmw=kw["use_mmw"],
@@ -416,6 +459,18 @@ class TwScheduler:
                 kw[f] = v
         return kw
 
+    def _req_seed(self, req: SolveRequest) -> int:
+        return self.seed if req.seed is None else req.seed
+
+    def _req_heuristics(self, req: SolveRequest) -> int:
+        """Improver-round budget for one request (request override, else
+        pool default; a heuristic_only request with neither gets the
+        fallback budget — it has no exact ladder to finish it)."""
+        n = self.heuristics if req.heuristics is None else req.heuristics
+        if req.heuristic_only and n <= 0:
+            n = DEFAULT_HEURISTIC_ROUNDS
+        return n
+
     def _group_key(self, req: SolveRequest) -> tuple:
         """Requests share a vmapped program iff this key matches: the
         static decide config plus the cap setting (explicit caps pin the
@@ -449,11 +504,20 @@ class TwScheduler:
                                              prog[1], 0, 0.0, None, {})
                 self._resolve_timeout(req, res)
                 return None
-            inst = batch.InstanceState(
-                req.g, solver_lib, use_preprocess=self.use_preprocess,
-                plan_kw=dict(start_k=req.start_k, **self.plan_kw),
-                reconstruct=req.reconstruct, recon_kw=self._recon_kw(req),
-                tracker=req.tracker)
+            if req.heuristic_only:
+                # bounds-only serving: no preprocess, no block plans, no
+                # exact rungs — just the improver lanes (DESIGN.md §15)
+                inst = bounds_engine.HeuristicState(
+                    req.g, solver_lib, seed=self._req_seed(req),
+                    max_rounds=self._req_heuristics(req),
+                    tracker=req.tracker)
+            else:
+                inst = batch.InstanceState(
+                    req.g, solver_lib, use_preprocess=self.use_preprocess,
+                    plan_kw=dict(start_k=req.start_k,
+                                 seed=self._req_seed(req), **self.plan_kw),
+                    reconstruct=req.reconstruct,
+                    recon_kw=self._recon_kw(req), tracker=req.tracker)
         except Exception as e:    # noqa: BLE001 — per-request isolation
             self._fail(req, e)
             return None
@@ -476,6 +540,7 @@ class TwScheduler:
         so a drained pool's request snapshots still sum to the pool
         scope.  Returns None when the request never got a child scope
         (e.g. a hand-built ``SolveRequest`` fed straight to the pool)."""
+        self._heur_rounds.pop(req.rid, None)
         tr = req.tracker
         if tr is None or isinstance(tr, telemetry.NullTracker):
             return None
@@ -711,12 +776,20 @@ class TwScheduler:
                     f"flight (pipeline depth {self.pipeline}); sync() "
                     "first")
             self.pool.admit(self._start)
+            # low-priority improver lanes ride along with the exact rungs:
+            # one batched dispatch covers every request with budget left
+            heur = self._pack_improvers()
             members = []          # (slot, req, inst, run, [ks to launch])
             for i, (req, inst) in self.pool.active():
                 run = inst.run
+                if run is None:
+                    continue      # heuristic_only: improver lanes only
                 cur = self._cursor.get(req.rid)
-                k0 = cur[1] if (cur is not None and cur[0] is run) \
-                    else run.k
+                # a heuristic lb jump may have moved run.k past the
+                # cursor: rungs below run.k are already refuted, never
+                # re-launch them
+                k0 = max(cur[1], run.k) \
+                    if (cur is not None and cur[0] is run) else run.k
                 # slot-proportional speculation: a width-S request holds
                 # S slots, so it is entitled to S concurrent rung
                 # dispatches per round — its ladder climbs S rungs per
@@ -730,14 +803,15 @@ class TwScheduler:
                     continue      # whole remaining ladder already flying
                 members.append((i, req, inst, run, list(range(k0, hi))))
                 self._cursor[req.rid] = (run, hi)
-            if not members:
+            if not members and not heur:
                 launched = False
             else:
                 launched = True
                 self.rounds += 1
-                n_round = max(run.plan.g.n
-                              for _i, _r, _s, run, _ks in members)
-                self._n_pad = max(self._n_pad, _round32(n_round))
+                if members:
+                    n_round = max(run.plan.g.n
+                                  for _i, _r, _s, run, _ks in members)
+                    self._n_pad = max(self._n_pad, _round32(n_round))
                 L = len(self.pool)
 
                 groups: Dict[tuple, tuple] = {}
@@ -814,6 +888,20 @@ class TwScheduler:
                     # one-element metas: the handle finalizes to a single
                     # LaneResult, so sync()'s zip feeds it like any lane
                     handles.append((handle, [meta]))
+                if heur:
+                    # ONE vmapped dispatch improves every budgeted
+                    # request's ub (seeded randomized min-degree sweep);
+                    # the matching lb contraction runs host-side at apply
+                    # time.  Metas are tagged "heur" so sync() routes
+                    # them through _apply_improvement, not feed
+                    handle = bounds_engine.ub_orders_async(
+                        [g for _i, _r, _s, _run, g, _sd in heur],
+                        [sd for _i, _r, _s, _run, _g, sd in heur],
+                        tracker=self.tracker)
+                    handles.append((handle,
+                                    [("heur", i, req, inst, run, sd)
+                                     for i, req, inst, run, _g, sd
+                                     in heur]))
                 self._rounds.append((self.rounds, handles,
                                      time.monotonic()))
         self._flush_events()
@@ -851,6 +939,69 @@ class TwScheduler:
         self._cap_pad[key] = cap
         return cap
 
+    def _pack_improvers(self) -> list:
+        """Collect this round's anytime-improver lanes (under the lock):
+        every active request with improver budget left and an open
+        lb < ub gap contributes its *current* graph — the in-flight
+        block for an exact request (block-local bounds compose through
+        ``InstanceState.bounds``), the whole graph for heuristic_only.
+        Returns ``(slot, req, inst, run, graph, seed)`` tuples; the seed
+        is derived from the request seed and the round index, so the
+        improver stream is deterministic per request."""
+        out = []
+        for i, (req, inst) in self.pool.active():
+            budget = self._req_heuristics(req)
+            done = self._heur_rounds.get(req.rid, 0)
+            if done >= budget:
+                continue
+            lb, ub = inst.bounds()
+            if lb >= ub:
+                continue
+            run = inst.run
+            target = run.plan.g if run is not None else inst.g
+            seed = bounds_engine._round_seed(self._req_seed(req), done)
+            self._heur_rounds[req.rid] = done + 1
+            out.append((i, req, inst, run, target, seed))
+        return out
+
+    def _apply_improvement(self, i: int, req: SolveRequest, inst,
+                           run, seed: int, width: int, order: list):
+        """Sync-side half of one improver round (under the lock): pair
+        the dispatched ub sweep with a host lb contraction, clamp both
+        into the request's state (``improve_bounds`` — monotone tighten
+        only), emit a ``bounds`` event if either side moved, and resolve
+        the request if the bounds closed its remaining ladder.  Stale
+        results (the block advanced, the request went terminal) are
+        dropped — improvements for a graph no longer being solved prove
+        nothing about the current block."""
+        rid = req.rid
+        if rid in self._discard or rid in self.terminal or \
+                inst.result is not None or inst.run is not run:
+            return
+        target = run.plan.g if run is not None else inst.g
+        lb_new = bounds_engine.contraction_lb(target, seed)
+        prog = self._prog.get(rid)
+        before = (prog[0], prog[1]) if prog is not None else None
+        info = inst.improve_bounds(lb=lb_new, ub=width, ub_order=order)
+        counts = {}
+        if info["ub_improved"]:
+            counts["heur_ub_improvements"] = 1
+        if info["lb_improved"]:
+            counts["heur_lb_improvements"] = 1
+        if info["rungs_skipped"]:
+            counts["exact_rungs_skipped"] = info["rungs_skipped"]
+        if counts:
+            (req.tracker or self.tracker).count(**counts)
+        b = self._bounds_event(req, inst)
+        if before is None or (b["lb"], b["ub"]) != before:
+            self._emit(req, dict(b, event="bounds", round=self.rounds))
+        if req.heuristic_only:
+            inst.step_done()     # budget accounting lives in the state
+        if inst.result is not None:
+            self._finish(req, inst)
+            self.pool.release(i)
+            self._cursor.pop(rid, None)
+
     def poll_admissions(self) -> None:
         """Overlap bookkeeping: admit and plan newly arrived requests
         into free slots while the launched dispatches are still in
@@ -879,12 +1030,22 @@ class TwScheduler:
         for handle, metas in parts:
             results = handle.result()          # device wait — no lock held
             with self._lock:
+                if metas and metas[0][0] == "heur":
+                    # improver lanes: apply, don't feed (bounds can move
+                    # and rungs can be skipped, but no rung is counted)
+                    for (_t, i, req, inst, run, seed), (w, order) in \
+                            zip(metas, results):
+                        self._apply_improvement(i, req, inst, run, seed,
+                                                w, order)
+                    continue
                 for (i, req, inst, run, k, name), res in zip(metas,
                                                              results):
-                    if req.rid in self._discard or inst.run is not run:
-                        # cancelled, deadline-preempted, or the block
-                        # decided on an earlier rung: the sequential
-                        # ladder never ran this one — discard it
+                    if req.rid in self._discard or inst.run is not run \
+                            or k != run.k:
+                        # cancelled, deadline-preempted, the block
+                        # decided on an earlier rung, or a heuristic lb
+                        # jump skipped past this rung: the (tightened)
+                        # sequential ladder never ran it — discard
                         # uncounted (speculation semantics, §8)
                         continue
                     inst.feed(k, res)
@@ -941,9 +1102,17 @@ class TwScheduler:
         or double-counted — the discarded rungs simply re-run)."""
         with self._lock:
             for _no, handles, _t in self._rounds:
-                for handle, _metas in handles:
+                for handle, metas in handles:
                     if handle is not None:
                         handle.discard()
+                    if metas and metas[0][0] == "heur":
+                        # un-spend the discarded improver rounds, or a
+                        # heuristic_only request whose budget was burned
+                        # by a failed round could never terminate
+                        for _t_, _i, req, _inst, _run, _sd in metas:
+                            n = self._heur_rounds.get(req.rid, 0)
+                            if n > 0:
+                                self._heur_rounds[req.rid] = n - 1
             self._rounds = []
             self._cursor.clear()
         self._flush_events()

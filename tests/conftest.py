@@ -1,8 +1,19 @@
 """Shared test plumbing.
 
-``hypothesis`` is a dev-only dependency (requirements-dev.txt).  Some CI
-images don't carry it, and a missing import must not take six whole test
-modules down with collection errors.  When the real package is absent we
+Two pieces live here:
+
+``check_event_stream`` — the serve-layer event-stream invariant
+checker (also exposed as the ``event_invariants`` fixture).  Every test
+that collects a request's event stream (async, traffic-shaping, shards,
+bounds engine — including the cancel/deadline paths) funnels it through
+the same checker, so the documented contract (``TwScheduler`` module
+docstring, DESIGN.md §11/§12/§15) is asserted in one place: strictly
+increasing ``seq``, monotone lb/ub, per-block ``rung_decided`` in
+increasing k, one terminal event and it is last.
+
+``hypothesis`` shim — ``hypothesis`` is a dev-only dependency
+(requirements-dev.txt).  Some CI images don't carry it, and a missing
+import must not take six whole test modules down with collection errors.  When the real package is absent we
 install a minimal shim into ``sys.modules`` that covers exactly the API
 surface our property tests use (``given``/``settings``/``strategies``
 ``integers|booleans|lists|sets|data``): examples are drawn from a
@@ -16,6 +27,81 @@ import inspect
 import random
 import sys
 import types
+
+import pytest
+
+TERMINAL_EVENTS = ("done", "cancelled", "error")
+
+
+def check_event_stream(events, rid=None):
+    """Assert the scheduler's per-request event-stream contract.
+
+    ``events`` is one request's stream as a list of event dicts (the
+    ``on_event`` sink's captures, or a drained ``TwClient.stream``).
+    Checks, per the documented guarantees:
+
+      * all events carry the same ``rid`` (== ``rid`` when given);
+      * ``seq`` is strictly increasing;
+      * ``admitted`` appears at most once, and only as the first event;
+      * ``lb`` never decreases, ``ub`` never increases, and ``lb <= ub``
+        in every event carrying both (monotone anytime bounds — the
+        heuristic improver lanes may only tighten);
+      * within one block, ``rung_decided`` events arrive in strictly
+        increasing ``k`` (ladder order; a heuristic lb jump may *skip*
+        rungs, never reorder them);
+      * exactly one terminal event (``done``/``cancelled``/``error``),
+        and it is last;
+      * an exact ``done`` has met bounds: ``lb == ub == width``.
+
+    Returns the terminal event so callers can chain assertions."""
+    assert events, "empty event stream"
+    rids = {ev.get("rid") for ev in events}
+    assert len(rids) == 1, f"stream mixes rids: {sorted(rids)}"
+    if rid is not None:
+        assert rids == {rid}
+
+    seqs = [ev["seq"] for ev in events if "seq" in ev]
+    assert seqs == sorted(set(seqs)), f"seq not strictly increasing: {seqs}"
+
+    kinds = [ev["event"] for ev in events]
+    assert kinds.count("admitted") <= 1
+    if "admitted" in kinds:
+        assert kinds[0] == "admitted", f"admitted not first: {kinds}"
+
+    lb_prev, ub_prev = None, None
+    per_block = {}
+    for ev in events:
+        lb, ub = ev.get("lb"), ev.get("ub")
+        if lb is not None and ub is not None:
+            assert lb <= ub, f"lb > ub in {ev}"
+        if lb is not None:
+            assert lb_prev is None or lb >= lb_prev, \
+                f"lb regressed {lb_prev} -> {lb} in {ev}"
+            lb_prev = lb
+        if ub is not None:
+            assert ub_prev is None or ub <= ub_prev, \
+                f"ub regressed {ub_prev} -> {ub} in {ev}"
+            ub_prev = ub
+        if ev["event"] == "rung_decided":
+            ks = per_block.setdefault(ev.get("block"), [])
+            assert not ks or ev["k"] > ks[-1], \
+                f"rung_decided out of k order for block {ev.get('block')}:" \
+                f" {ks + [ev['k']]}"
+            ks.append(ev["k"])
+
+    terminals = [ev for ev in events if ev["event"] in TERMINAL_EVENTS]
+    assert len(terminals) == 1, f"expected one terminal event: {kinds}"
+    assert events[-1] is terminals[0], f"terminal event not last: {kinds}"
+    term = terminals[0]
+    if term["event"] == "done" and term.get("exact"):
+        assert term["lb"] == term["ub"] == term["width"], term
+    return term
+
+
+@pytest.fixture
+def event_invariants():
+    """The shared event-stream invariant checker, as a fixture."""
+    return check_event_stream
 
 
 def _install_hypothesis_shim():

@@ -1,0 +1,82 @@
+"""Exact reference oracles shared across the test suite.
+
+Centralizes what used to be per-file ad-hoc references:
+
+  * ``tw_oracle`` — the exact Held-Karp python DP over vertex subsets
+    (previously inlined in ``test_engine_parity.py``), usable up to
+    n ~ 12;
+  * ``golden_widths.json`` — known exact treewidths for the small
+    Table-1 / named instances (previously the ``KNOWN`` list inlined in
+    ``test_core_solver.py``), each entry optionally flagged ``slow``
+    when the fast exact tier cannot finish it — the heuristic-only
+    serving tests use exactly those as oracle targets;
+  * ``order_is_valid`` — elimination-order certificate sanity.
+
+Every consumer asserts against the same numbers, so a golden update is
+one file, not a grep.
+"""
+import json
+import pathlib
+
+from repro.core import expand, graph
+
+_GOLDEN_PATH = pathlib.Path(__file__).with_name("golden_widths.json")
+
+# name -> zero-argument Graph factory for the golden instances that are
+# not registry one-liners (parameterized families)
+FACTORIES = {
+    "path10": lambda: graph.path(10),
+    "cycle12": lambda: graph.cycle(12),
+    "complete7": lambda: graph.complete(7),
+    "bipartite4_6": lambda: graph.complete_bipartite(4, 6),
+    "star9": lambda: graph.star(9),
+    "grid4x5": lambda: graph.grid(4, 5),
+    "grid3x7": lambda: graph.grid(3, 7),
+    "grid5x5": lambda: graph.grid(5, 5),
+    "tree20_7": lambda: graph.random_tree(20, 7),
+}
+
+
+def golden_widths() -> dict:
+    """name -> {"tw": int, "slow": bool} from the golden file."""
+    raw = json.loads(_GOLDEN_PATH.read_text())
+    return {name: {"tw": int(spec["tw"]), "slow": bool(spec.get("slow"))}
+            for name, spec in raw.items() if not name.startswith("_")}
+
+
+def make_graph(name: str):
+    """Instantiate a golden instance by name (factory or registry)."""
+    if name in FACTORIES:
+        return FACTORIES[name]()
+    return graph.REGISTRY[name]()
+
+
+def golden_cases(slow=False):
+    """[(name, factory, tw)] for golden instances; ``slow`` selects the
+    heavy tier (fast exact runs should keep the default)."""
+    return [(name, (lambda n=name: make_graph(n)), spec["tw"])
+            for name, spec in golden_widths().items()
+            if spec["slow"] == slow]
+
+
+def tw_oracle(g) -> int:
+    """Exact Held-Karp treewidth by python DP over subsets (n <= 12)."""
+    n = g.n
+    adjb = [list(map(bool, row)) for row in g.adj]
+    full = (1 << n) - 1
+    f = {0: -1}
+    for s in range(1, full + 1):
+        best = n
+        members = [v for v in range(n) if s >> v & 1]
+        sset = set(members)
+        for v in members:
+            prev = f[s & ~(1 << v)]
+            d = expand.degree_oracle(adjb, sset - {v}, v)
+            best = min(best, max(prev, d))
+        f[s] = best
+    return f[full]
+
+
+def order_is_valid(g, order) -> bool:
+    """Is ``order`` a permutation of g's vertices?"""
+    return sorted(order) == list(range(g.n))

@@ -4,28 +4,19 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import oracle
 from repro.core import bounds, graph, preprocess, solver
 
 FAST = dict(cap=1 << 16, block=1 << 9)
 
-KNOWN = [
-    (lambda: graph.path(10), 1),
-    (lambda: graph.cycle(12), 2),
-    (lambda: graph.complete(7), 6),
-    (lambda: graph.complete_bipartite(4, 6), 4),
-    (lambda: graph.star(9), 1),
-    (lambda: graph.grid(4, 5), 4),
-    (lambda: graph.grid(3, 7), 3),
-    (lambda: graph.petersen(), 4),
-    (lambda: graph.myciel(3), 5),
-    (lambda: graph.myciel(4), 10),
-    (lambda: graph.queen(5), 18),
-    (lambda: graph.random_tree(20, 7), 1),
-]
+# the shared golden-widths file (tests/golden_widths.json via tests/oracle.py)
+# is the single source of truth for known exact treewidths
+KNOWN = oracle.golden_cases()
+HEAVY = oracle.golden_widths()
 
 
-@pytest.mark.parametrize("gf,want", KNOWN, ids=lambda x: getattr(x, "__name__", str(x)))
-def test_known_treewidth(gf, want):
+@pytest.mark.parametrize("name,gf,want", KNOWN, ids=[c[0] for c in KNOWN])
+def test_known_treewidth(name, gf, want):
     g = gf()
     r = solver.solve(g, **FAST)
     assert r.exact and r.width == want, (g.name, r)
@@ -35,7 +26,7 @@ def test_known_treewidth(gf, want):
 def test_grid5x5_heavy():
     """Grids are state-heavy (cf. the paper's 8x6 torus at 2.1e9 states)."""
     r = solver.solve(graph.grid(5, 5), cap=1 << 19, block=1 << 11)
-    assert r.exact and r.width == 5
+    assert r.exact and r.width == HEAVY["grid5x5"]["tw"]
 
 
 def test_mcgee_overflow_semantics():
@@ -43,13 +34,13 @@ def test_mcgee_overflow_semantics():
     true value here (paper: myciel5 found exactly despite overflow), but the
     result must be flagged inexact."""
     r = solver.solve(graph.mcgee(), cap=1 << 16, block=1 << 9)
-    assert r.width == 7 and not r.exact
+    assert r.width == HEAVY["mcgee"]["tw"] and not r.exact
 
 
 @pytest.mark.slow
 def test_mcgee_exact():
     r = solver.solve(graph.mcgee(), cap=1 << 22, block=1 << 12)
-    assert r.exact and r.width == 7
+    assert r.exact and r.width == HEAVY["mcgee"]["tw"]
 
 
 def test_relabel_invariance():

@@ -23,8 +23,9 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
+import oracle
 from repro.core import backend as backend_lib
-from repro.core import bitset, engine, expand, frontier as frontier_lib
+from repro.core import bitset, engine, frontier as frontier_lib
 from repro.core import graph, solver
 
 BLOCK = 32          # pinned: host run_level adapts within [32, block], so 32
@@ -190,30 +191,13 @@ def test_unsupported_backend_combos_fail_at_dispatch():
                             backend="pallas")
 
 
-def _tw_oracle(g):
-    """Exact Held-Karp treewidth by python DP over subsets (n <= 12)."""
-    n = g.n
-    adjb = [list(map(bool, row)) for row in g.adj]
-    full = (1 << n) - 1
-    f = {0: -1}
-    for s in range(1, full + 1):
-        best = n
-        members = [v for v in range(n) if s >> v & 1]
-        sset = set(members)
-        for v in members:
-            prev = f[s & ~(1 << v)]
-            d = expand.degree_oracle(adjb, sset - {v}, v)
-            best = min(best, max(prev, d))
-        f[s] = best
-    return f[full]
-
-
 def test_solve_matches_python_oracle():
-    """End-to-end fused solve() against the exact python DP."""
+    """End-to-end fused solve() against the exact python DP
+    (``tests/oracle.py``, shared with the bounds-engine invariants)."""
     for seed in range(5):
         rng = np.random.RandomState(100 + seed)
         g = graph.gnp(8, float(rng.uniform(0.2, 0.6)), 100 + seed)
-        want = _tw_oracle(g)
+        want = oracle.tw_oracle(g)
         got = solver.solve(g, cap=1 << 12, block=BLOCK, engine="fused")
         assert got.exact and got.width == want, (seed, want, got)
 

@@ -86,31 +86,20 @@ def _collect(sched, gs, **per_req):
     return rids, events, done
 
 
-def test_event_stream_order_and_monotone_bounds():
+def test_event_stream_order_and_monotone_bounds(event_invariants):
     """Per request: seq strictly increases, a block's rung_decided ks
     arrive in increasing order, lb never decreases, ub never increases,
     lb <= ub throughout, and the final done event is last and consistent
-    with the result (lb meets ub at the width when exact)."""
+    with the result (lb meets ub at the width when exact) — the shared
+    ``conftest.check_event_stream`` contract."""
     sched = TwScheduler(lanes=2, **FAST)
     rids, events, done = _collect(sched, [graph.petersen(), graph.queen(5)])
     for rid in rids:
         evs = events[rid]
         assert evs[0]["event"] == "admitted"
-        assert evs[-1]["event"] == "done"
-        assert all(e["event"] != "done" for e in evs[:-1])
-        seqs = [e["seq"] for e in evs]
-        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
-        per_block = {}
-        for e in evs:
-            if e["event"] == "rung_decided":
-                per_block.setdefault(e["block"], []).append(e["k"])
-        for ks in per_block.values():
-            assert ks == sorted(ks) and len(set(ks)) == len(ks)
-        bounds = [(e["lb"], e["ub"]) for e in evs if "lb" in e]
-        assert all(lo <= hi for lo, hi in bounds)
-        assert all(a[0] <= b[0] for a, b in zip(bounds, bounds[1:]))
-        assert all(a[1] >= b[1] for a, b in zip(bounds, bounds[1:]))
-        r, d = done[rid], evs[-1]
+        d = event_invariants(evs, rid=rid)
+        r = done[rid]
+        assert d["event"] == "done"
         assert (d["width"], d["exact"], d["expanded"]) == \
             (r.width, r.exact, r.expanded)
         assert d["ub"] == r.width

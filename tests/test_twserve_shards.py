@@ -71,7 +71,8 @@ def test_sharded_request_occupies_shards_slots():
     assert (done[nar].width, done[nar].expanded) == (ref.width, ref.expanded)
 
 
-def test_mixed_stream_parity_with_sharded_and_narrow_requests():
+def test_mixed_stream_parity_with_sharded_and_narrow_requests(
+        event_invariants):
     gs = [(graph.petersen(), 4), (graph.myciel(3), 1), (graph.queen(4), 2)]
     sched = TwScheduler(lanes=4, **FAST)
     evs = []
@@ -83,19 +84,19 @@ def test_mixed_stream_parity_with_sharded_and_narrow_requests():
         assert (res.width, res.exact, res.expanded, res.per_k) == \
             (ref.width, ref.exact, ref.expanded, ref.per_k), (g.name, s)
     # every request saw a full monotone event stream ending in done
+    # (the shared conftest contract, per rid)
     for rid in rids:
         mine = [e for e in evs if e["rid"] == rid]
-        assert mine[-1]["event"] == "done"
-        bounds = [(e["lb"], e["ub"]) for e in mine if "lb" in e]
-        assert all(a[0] <= b[0] and a[1] >= b[1]
-                   for a, b in zip(bounds, bounds[1:]))
+        assert event_invariants(mine, rid=rid)["event"] == "done"
 
 
 # -------------------------------------------------- cancel / deadline / prio
 
-def test_cancel_sharded_request_frees_the_whole_slot_group():
+def test_cancel_sharded_request_frees_the_whole_slot_group(
+        event_invariants):
     sched = TwScheduler(lanes=4, **FAST)
-    wide = sched.submit(graph.queen(6), shards=4)
+    evs = []
+    wide = sched.submit(graph.queen(6), shards=4, on_event=evs.append)
     assert sched.launch()
     assert sched.pool.free == 0
     assert sched.cancel(wide)
@@ -103,11 +104,14 @@ def test_cancel_sharded_request_frees_the_whole_slot_group():
     done = sched.run()
     assert wide not in done
     assert sched.terminal[wide] == "cancelled"
+    assert event_invariants(evs, rid=wide)["event"] == "cancelled"
 
 
-def test_deadline_preempts_a_sharded_request_with_anytime_bounds():
+def test_deadline_preempts_a_sharded_request_with_anytime_bounds(
+        event_invariants):
     sched = TwScheduler(lanes=4, **FAST)
-    rid = sched.submit(graph.queen(6), shards=4)
+    evs = []
+    rid = sched.submit(graph.queen(6), shards=4, on_event=evs.append)
     assert sched.launch()
     for _i, (req, _inst) in sched.pool.active():
         req.deadline = time.monotonic() - 1.0
@@ -118,6 +122,8 @@ def test_deadline_preempts_a_sharded_request_with_anytime_bounds():
     assert res.lb <= ref.width <= res.ub
     assert sched.terminal[rid] == "timeout"
     assert sched.pool.free == 4          # the whole group released
+    term = event_invariants(evs, rid=rid)
+    assert term["event"] == "done" and term["timed_out"] is True
 
 
 def test_urgent_narrow_overtakes_a_queued_wide_request():

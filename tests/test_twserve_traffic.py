@@ -74,7 +74,7 @@ def test_slotpool_discard_removes_a_queued_item():
 
 # ----------------------------------------------------------- cancellation
 
-def test_cancel_queued_request_never_runs():
+def test_cancel_queued_request_never_runs(event_invariants):
     sched = TwScheduler(lanes=1, **FAST)
     keep = sched.submit(graph.petersen())
     evs = []
@@ -86,10 +86,11 @@ def test_cancel_queued_request_never_runs():
     assert (done[keep].width, done[keep].expanded) == \
         (ref.width, ref.expanded)
     assert drop not in done
-    assert evs[-1]["event"] == "cancelled"
+    assert event_invariants(evs, rid=drop)["event"] == "cancelled"
 
 
-def test_cancel_running_request_frees_the_lane_and_keeps_parity():
+def test_cancel_running_request_frees_the_lane_and_keeps_parity(
+        event_invariants):
     """Cancelling mid-flight discards the rid's in-flight verdicts
     uncounted; the surviving request stays bit-identical to its solo
     sequential solve."""
@@ -107,11 +108,9 @@ def test_cancel_running_request_frees_the_lane_and_keeps_parity():
                                   ref.per_k)
     assert slow not in done
     assert sched.terminal[slow] == "cancelled"
-    assert evs[-1]["event"] == "cancelled"
-    # the cancelled stream's bounds stay monotone up to the terminal event
-    bounds = [(e["lb"], e["ub"]) for e in evs if "lb" in e]
-    assert all(a[0] <= b[0] and a[1] >= b[1]
-               for a, b in zip(bounds, bounds[1:]))
+    # the cancelled stream keeps the full contract (monotone bounds up
+    # to the terminal event included)
+    assert event_invariants(evs, rid=slow)["event"] == "cancelled"
 
 
 def test_cancel_is_idempotent_and_safe_on_unknown_rids():
@@ -126,7 +125,8 @@ def test_cancel_is_idempotent_and_safe_on_unknown_rids():
 
 # --------------------------------------------------------------- deadlines
 
-def test_deadline_preempts_mid_ladder_with_monotone_anytime_bounds():
+def test_deadline_preempts_mid_ladder_with_monotone_anytime_bounds(
+        event_invariants):
     sched = TwScheduler(lanes=1, **FAST)
     evs = []
     rid = sched.submit(graph.queen(6), on_event=evs.append)
@@ -144,7 +144,7 @@ def test_deadline_preempts_mid_ladder_with_monotone_anytime_bounds():
     assert sched.terminal[rid] == "timeout"
     assert sched.status(rid)["timed_out"] is True
     assert sched.pool.free == 1                # the lane was released
-    last = evs[-1]
+    last = event_invariants(evs, rid=rid)
     assert last["event"] == "done" and last["timed_out"] is True
     assert (last["lb"], last["ub"]) == (res.lb, res.ub)
     bounds = [(e["lb"], e["ub"]) for e in evs if "lb" in e]
@@ -260,7 +260,7 @@ def test_pipeline_recover_after_failed_sync_keeps_parity():
 
 # ----------------------------------------------------- lifecycle bugfixes
 
-def test_poisoned_admission_is_isolated_and_emits_error():
+def test_poisoned_admission_is_isolated_and_emits_error(event_invariants):
     """An exception inside admission (preprocess/bounds/plan) must not
     lose the request or kill the queue: the request resolves with an
     ``error`` terminal event and everything behind it still runs."""
@@ -273,6 +273,7 @@ def test_poisoned_admission_is_isolated_and_emits_error():
     assert sched.terminal[bad] == "error"
     assert "AttributeError" in sched.errors[bad]
     assert [e["event"] for e in evs] == ["admitted", "error"]
+    assert event_invariants(evs, rid=bad)["event"] == "error"
     st = sched.status(bad)
     assert st["state"] == "error" and "AttributeError" in st["error"]
     ref = solver.solve(graph.petersen(), **FAST)
@@ -307,19 +308,17 @@ def test_event_sinks_run_outside_the_scheduler_lock():
     assert done[rid].width == solver.solve(graph.petersen(), **FAST).width
 
 
-def test_event_ordering_guarantees_survive_deferred_delivery():
+def test_event_ordering_guarantees_survive_deferred_delivery(
+        event_invariants):
     sched = TwScheduler(lanes=2, **FAST)
     evs = []
     rid = sched.submit(graph.queen(5), speculate=2, on_event=evs.append)
     sched.run()
     assert [e["seq"] for e in evs] == list(range(1, len(evs) + 1))
     assert evs[0]["event"] == "admitted"
-    assert evs[-1]["event"] == "done"
+    assert event_invariants(evs, rid=rid)["event"] == "done"
     ks = [e["k"] for e in evs if e["event"] == "rung_decided"]
     assert ks == sorted(ks) and ks
-    bounds = [(e["lb"], e["ub"]) for e in evs if "lb" in e]
-    assert all(a[0] <= b[0] and a[1] >= b[1]
-               for a, b in zip(bounds, bounds[1:]))
 
 
 def test_duplicate_rid_is_rejected():
