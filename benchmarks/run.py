@@ -40,6 +40,12 @@ def main() -> None:
     from . import serve_load
     serve_load.run(quick=not full)
 
+    print("# cache_effect: content-addressed result cache (hit rate, "
+          "warm-hit latency, bit-identity vs uncached)", flush=True)
+    from . import cache_effect
+    cache_effect.run(full=full, quick=not full,
+                     json_path="BENCH_cache.json")
+
     print("# shard_scaling: intra-request scale-out (sharded frontier "
           "vs sequential)", flush=True)
     from . import shard_scaling

@@ -21,18 +21,31 @@ driver doubles as an end-to-end wire correctness check.
     python -m benchmarks.serve_load               # fast trace (16 reqs)
     python -m benchmarks.serve_load --quick       # CI-sized (8 reqs)
     python -m benchmarks.serve_load --jsonl serve_load_metrics.jsonl
+    python -m benchmarks.serve_load --trace wl_trace.jsonl --cache 64
 
 ``--jsonl PATH`` streams the service's raw telemetry mutation log
 (``telemetry.JsonlSink`` attached to the pool scope) for offline
 analysis; CI uploads it as an artifact.
+
+``--trace PATH`` replays a generated workload trace
+(``python -m repro.workload`` JSONL, DESIGN.md §16) instead of the
+built-in interleave: each arrival's graph + knobs are submitted at its
+recorded offset, parity is asserted per arrival against a deduped set
+of reference solves (relabeled duplicates check the verdict surface —
+the solve is label-invariant, the plan heuristics' tie-breaks are not),
+and with ``--cache N`` the server runs its content-addressed result
+cache — duplicate arrivals resolve at submit and the driver asserts
+their per-request telemetry shows **zero device dispatches**.
 """
 from __future__ import annotations
 
 import time
 
 from repro.core import solver
+from repro.core.canon import graph_key
 from repro.launch.twserved import TwServer
 from repro.serve.client import TwClient
+from repro.workload import read_trace
 
 from .common import Timer, emit, get_instance
 
@@ -114,6 +127,132 @@ def run(quick: bool = False, lanes: int = 4, block: int = 1 << 10,
                 host_syncs=int(pool["host_syncs"]))
 
 
+# result-relevant knob subset: what makes two arrivals need distinct
+# reference solves (scheduling knobs — shards/speculate/priority — are
+# bit-identical paths and share one reference)
+_REF_KNOBS = ("mode", "use_mmw", "use_simplicial", "start_k",
+              "heuristics", "seed")
+
+
+def run_trace(arrivals, lanes: int = 4, block: int = 1 << 10,
+              cache: int = 256, jsonl_path: str = None,
+              closed: bool = False):
+    """Replay a generated workload trace (``repro.workload`` arrivals)
+    against an embedded server over the real wire.
+
+    Open-loop, like ``run``; additionally exercises and checks the
+    result cache: every arrival's verdict is parity-asserted against a
+    reference ``solver.solve`` deduped by (canonical graph, result-
+    relevant knobs) — relabeled duplicates (``iso``) check
+    ``width``/``exact`` (the verdict is label-invariant; the plan
+    heuristics' greedy tie-breaks and therefore ``expanded`` are not) —
+    and when the cache is on, every rid whose telemetry shows a cache
+    hit is asserted to have performed **zero device dispatches**.
+
+    ``closed=True`` switches to closed-loop replay — each arrival waits
+    for its result before the next submits (offsets ignored).  Under a
+    closed loop every duplicate arrives *after* its root finished, so
+    with the cache on the hit count deterministically equals the
+    duplicate count — what ``benchmarks/cache_effect.py`` and the CI
+    smoke assert."""
+    assert arrivals, "empty trace"
+    refs = {}
+    for a in arrivals:
+        g = a.graph()
+        key = (graph_key(g),
+               tuple((k, a.knobs.get(k)) for k in _REF_KNOBS))
+        if key not in refs:
+            kn = {k: a.knobs[k] for k in _REF_KNOBS if k in a.knobs}
+            refs[key] = solver.solve(g, block=block, **kn)
+        a._ref = refs[key]      # noqa: SLF001 — driver-local annotation
+
+    srv = TwServer(port=0, lanes=lanes, block=block, cache=cache,
+                   metrics_jsonl=jsonl_path)
+    srv.start()
+    c = TwClient(port=srv.port)
+    try:
+        rids = []
+        results = {}
+        t0 = time.monotonic()
+        for a in arrivals:
+            if not closed:
+                lag = t0 + a.t - time.monotonic()
+                if lag > 0:
+                    time.sleep(lag)
+            rid = c.submit(a.graph(), **a.knobs)
+            rids.append((a, rid))
+            if closed:
+                results[rid] = c.result(rid)
+        with Timer() as t_drain:
+            for _a, rid in rids:
+                if rid not in results:
+                    results[rid] = c.result(rid)
+
+        for a, rid in rids:
+            ref, res = a._ref, results[rid]
+            assert (ref.width, ref.exact) == (res["width"], res["exact"]), \
+                (a.idx, a.name, rid, res, ref)
+            if not a.iso:
+                assert ref.expanded == res["expanded"], \
+                    (a.idx, a.name, rid, res, ref)
+
+        m = c.metrics()
+        snaps = {int(r): s for r, s in m["requests"].items()}
+        lat = [snaps[rid]["timings"]["request_s"]["total_s"]
+               for _a, rid in rids]
+        hit_lat, miss_lat, hits = [], [], 0
+        hit_idxs = []
+        for a, rid in rids:
+            cnt = snaps[rid]["counters"]
+            if cnt.get("cache_hits"):
+                hits += 1
+                hit_idxs.append(a.idx)
+                hit_lat.append(snaps[rid]["timings"]["request_s"]
+                               ["total_s"])
+                # the headline guarantee: a warm hit never touches the
+                # device — its request scope saw no dispatch and
+                # expanded no state
+                assert not cnt.get("dispatches") and \
+                    not cnt.get("expanded"), (rid, cnt)
+            else:
+                miss_lat.append(snaps[rid]["timings"]["request_s"]
+                                ["total_s"])
+        pool = m["pool"]["counters"]
+        cstats = c.cache_stats()
+    finally:
+        srv.close()
+
+    p50, p95, p99 = _pct(lat, 50), _pct(lat, 95), _pct(lat, 99)
+    wall = time.monotonic() - t0
+    dups = sum(1 for a in arrivals if a.dup_of is not None)
+    print(f"serve_load[trace]: {len(arrivals)} arrivals "
+          f"({dups} duplicates) over {arrivals[-1].t:.2f}s, "
+          f"{lanes} lanes, cache={cache}", flush=True)
+    print(f"  submit->done latency  p50={p50 * 1e3:.1f}ms  "
+          f"p95={p95 * 1e3:.1f}ms  p99={p99 * 1e3:.1f}ms", flush=True)
+    if hit_lat:
+        print(f"  warm hits {hits}: p50={_pct(hit_lat, 50) * 1e3:.2f}ms "
+              f"(cold p50={_pct(miss_lat, 50) * 1e3:.1f}ms); "
+              f"zero-dispatch asserted", flush=True)
+    print(f"  pool totals           dispatches={int(pool['dispatches'])} "
+          f"reqs_done={int(pool.get('reqs_done', 0))} "
+          f"cache_hits={int(pool.get('cache_hits', 0))}", flush=True)
+    print(f"  wall {wall:.2f}s (drain {t_drain.seconds:.2f}s); "
+          f"parity=exact", flush=True)
+    emit("serve_load/trace", p50,
+         f"p50_s={p50:.4f};p95_s={p95:.4f};p99_s={p99:.4f};"
+         f"n={len(arrivals)};dups={dups};hits={hits};cache={cache};"
+         f"dispatches={int(pool['dispatches'])};parity=exact")
+    return dict(p50_s=p50, p95_s=p95, p99_s=p99, n=len(arrivals),
+                dups=dups, hits=hits, cache_entries=cache,
+                lanes=lanes, wall_s=wall, closed=closed,
+                hit_p50_s=_pct(hit_lat, 50) if hit_lat else None,
+                miss_p50_s=_pct(miss_lat, 50) if miss_lat else None,
+                dispatches=int(pool["dispatches"]),
+                cache_stats=cstats, hit_idxs=hit_idxs,
+                results={a.idx: results[rid] for a, rid in rids})
+
+
 if __name__ == "__main__":
     import sys
     jsonl_path = None
@@ -122,4 +261,13 @@ if __name__ == "__main__":
     lanes = 4
     if "--lanes" in sys.argv:
         lanes = int(sys.argv[sys.argv.index("--lanes") + 1])
-    run(quick="--quick" in sys.argv, lanes=lanes, jsonl_path=jsonl_path)
+    if "--trace" in sys.argv:
+        trace_path = sys.argv[sys.argv.index("--trace") + 1]
+        cache = 256
+        if "--cache" in sys.argv:
+            cache = int(sys.argv[sys.argv.index("--cache") + 1])
+        run_trace(read_trace(trace_path), lanes=lanes, cache=cache,
+                  jsonl_path=jsonl_path, closed="--closed" in sys.argv)
+    else:
+        run(quick="--quick" in sys.argv, lanes=lanes,
+            jsonl_path=jsonl_path)

@@ -252,19 +252,47 @@ def random_partial_ktree(n: int, k: int, drop: float, seed: int) -> Graph:
 # ---------------------------------------------------------------- DIMACS io
 
 def read_dimacs(path: str) -> Graph:
+    """Read a DIMACS ``.col``-style or PACE ``.gr`` graph.
+
+    Tolerant of what real instance files actually contain: comment
+    (``c ...`` / ``% ...``) and blank lines anywhere (not just a header
+    block), ``e u v`` and bare ``u v`` edge lines mixed, node-weight
+    ``n v w`` lines (ignored), a ``p`` header whose format token may be
+    missing (``p tw n m`` / ``p edge n m`` / ``p n m``), and both 1- and
+    0-based vertex numbering: files touching vertex 0 are taken as
+    0-based, everything else shifts down by one (the PACE/DIMACS
+    convention).  Self-loops are dropped and duplicate edges collapse
+    (``from_edges``); indices past the header's ``n`` grow the graph
+    instead of crashing."""
     n, edges = 0, []
     name = path.rsplit("/", 1)[-1].rsplit(".", 1)[0]
     with open(path) as f:
         for line in f:
             t = line.split()
-            if not t or t[0] == "c":
+            if not t or t[0] in ("c", "%") or t[0].startswith("%"):
                 continue
             if t[0] == "p":
-                n = int(t[2])
+                # "p tw n m" / "p edge n m" / bare "p n m": the vertex
+                # count is the first numeric token
+                nums = [x for x in t[1:] if x.lstrip("-").isdigit()]
+                if not nums:
+                    raise ValueError(
+                        f"{path}: malformed p header {line.rstrip()!r}")
+                n = int(nums[0])
+            elif t[0] == "n":
+                continue               # node-weight line (some .col files)
             elif t[0] == "e":
-                edges.append((int(t[1]) - 1, int(t[2]) - 1))
-            elif len(t) == 2:  # PACE .gr edge line
-                edges.append((int(t[0]) - 1, int(t[1]) - 1))
+                edges.append((int(t[1]), int(t[2])))
+            elif len(t) == 2:          # PACE .gr edge line
+                edges.append((int(t[0]), int(t[1])))
+    if any(u < 0 or v < 0 for u, v in edges):
+        raise ValueError(f"{path}: negative vertex index")
+    # unified base detection over all edge lines: any vertex 0 => the
+    # file is 0-based; otherwise 1-based (shift down)
+    if edges and not any(0 in e for e in edges):
+        edges = [(u - 1, v - 1) for u, v in edges]
+    if edges:
+        n = max(n, max(max(e) for e in edges) + 1)
     return from_edges(n, edges, name)
 
 

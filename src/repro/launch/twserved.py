@@ -26,7 +26,17 @@ per line:
     {"op": "cancel", "rid": 0}   -> {"ok": true, "cancelled": true}
     {"op": "metrics"}            -> {"ok": true, "pool": {...}, "requests": {...}}
     {"op": "metrics", "rid": 0}  -> same, "requests" filtered to rid 0
+    {"op": "cache_stats"}        -> {"ok": true, "enabled": true, "hits": 3, ...}
     {"op": "shutdown"}           -> {"ok": true}  (drains in-flight, exits)
+
+Result cache (DESIGN.md §16): the server keeps a content-addressed
+cache of finished solves keyed on the *canonical* graph form × the
+effective config (``--cache N`` entries, LRU; 0 disables).  A repeat
+submission — even an isomorphically relabeled one — resolves at submit
+time with a synthesized event stream flagged ``"cached": true`` and
+never touches the queue or the device; ``"no_cache": true`` on a submit
+line forces a fresh solve and suppresses insertion.  ``cache_stats``
+returns the hit/miss/eviction counters.
 
 ``metrics`` returns the scheduler's scoped telemetry snapshot
 (``TwScheduler.metrics``): pool-level counters/gauges/timings plus the
@@ -159,7 +169,7 @@ def _wire_to_graph(msg: dict):
 
 _KNOBS = ("reconstruct", "start_k", "mode", "use_mmw", "use_simplicial",
           "cap", "speculate", "shards", "priority", "deadline_s",
-          "heuristics", "heuristic_only", "seed")
+          "heuristics", "heuristic_only", "seed", "no_cache")
 
 
 class TwServer:
@@ -340,6 +350,8 @@ class TwServer:
         elif op == "metrics":
             rid = int(msg["rid"]) if msg.get("rid") is not None else None
             _send(wfile, {"ok": True, **self.sched.metrics(rid)})
+        elif op == "cache_stats":
+            _send(wfile, {"ok": True, **self.sched.cache_stats()})
         elif op == "cancel":
             cancelled = self.sched.cancel(_rid(msg))
             with self._wake:
@@ -450,6 +462,12 @@ def main(argv=None):
                          "(submit knob \"shards\"): rebalance when the "
                          "max shard exceeds ratio x mean occupancy "
                          "(default core.shard.DEFAULT_DONATE_RATIO)")
+    ap.add_argument("--cache", type=int, default=256, metavar="N",
+                    help="content-addressed result cache entries (LRU; "
+                         "0 disables). Isomorphic resubmissions resolve "
+                         "at submit without touching the device; the "
+                         "cache_stats op and the no_cache submit knob "
+                         "expose/bypass it (DESIGN.md §16)")
     ap.add_argument("--keep-results", type=int,
                     default=DEFAULT_KEEP_RESULTS,
                     help="finished requests retained for status/result/"
@@ -480,7 +498,8 @@ def main(argv=None):
                        max_queue=args.max_queue, pipeline=args.pipeline,
                        prio_weight=args.prio_weight,
                        donate_ratio=args.donate_ratio,
-                       budget_bytes=budget, verbose=args.verbose)
+                       budget_bytes=budget, cache=args.cache,
+                       verbose=args.verbose)
     except backend_lib.BackendCapabilityError as e:
         print(f"[twserved] unsupported pool configuration: {e}",
               file=sys.stderr)

@@ -17,6 +17,7 @@ Wire operations (see ``repro.launch.twserved`` for the server side):
   {"op": "result", "rid": 0}    -> blocks, then {"ok": true, "result": {...}}
   {"op": "cancel", "rid": 0}                        -> {"ok": true, "cancelled": true}
   {"op": "metrics"}             -> {"ok": true, "pool": {...}, "requests": {...}}
+  {"op": "cache_stats"}         -> {"ok": true, "enabled": true, "hits": 3, ...}
   {"op": "shutdown"}                                -> {"ok": true}
 
 Runnable example (start a server first, e.g.
@@ -124,7 +125,7 @@ class TwClient:
         are the per-request overrides (``reconstruct``, ``start_k``,
         ``mode``, ``use_mmw``, ``use_simplicial``, ``cap``,
         ``speculate``, ``shards``, ``priority``, ``deadline_s``,
-        ``heuristics``, ``heuristic_only``, ``seed``).
+        ``heuristics``, ``heuristic_only``, ``seed``, ``no_cache``).
         ``heuristic_only=True`` serves anytime bounds without any exact
         rung — graphs beyond exact-DP reach terminate with
         ``exact = (lb == ub)``; ``heuristics`` budgets the improver
@@ -190,6 +191,17 @@ class TwClient:
         if rid is not None:
             req["rid"] = int(rid)
         resp = self._rpc(req)
+        resp.pop("ok", None)
+        return resp
+
+    def cache_stats(self) -> dict:
+        """The server's result-cache counters (``TwScheduler.
+        cache_stats``): ``enabled`` plus, when a cache is configured,
+        entries/capacity/pinned and the hits/misses/insertions/evictions
+        counters with the running ``hit_rate``.  A cached submit's
+        events and its ``admitted`` line carry ``"cached": true``; the
+        ``no_cache`` submit knob bypasses the cache per request."""
+        resp = self._rpc({"op": "cache_stats"})
         resp.pop("ok", None)
         return resp
 

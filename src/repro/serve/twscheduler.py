@@ -119,6 +119,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from repro.core import backend as backend_lib
 from repro.core import batch, bitset, bloom
 from repro.core import bounds_engine
+from repro.core import canon
 from repro.core import engine as engine_lib
 from repro.core import frontier as frontier_lib
 from repro.core import shard as shard_lib
@@ -126,6 +127,7 @@ from repro.core import solver as solver_lib
 from repro.core import telemetry
 from repro.core.graph import Graph
 
+from .cache import ResultCache
 from .slots import QueueFull, SlotPool
 
 # Each scheduler instance gets a uniquely-scoped pool tracker (child of
@@ -177,12 +179,19 @@ class SolveRequest:
     heuristics: Optional[int] = None
     heuristic_only: bool = False
     seed: Optional[int] = None
+    # result-cache opt-out (DESIGN.md §16): True forces a fresh solve and
+    # suppresses both lookup and insertion for this request
+    no_cache: bool = False
     # set by the scheduler at submit/admission (not caller knobs):
     # per-request telemetry child scope, submit instant (admission
-    # latency), and the round count at admission (rounds-per-request)
+    # latency), and the round count at admission (rounds-per-request);
+    # cache_key/cache_perm are stamped on a cache miss so ``_finish``
+    # knows where (and through which canonical relabeling) to insert
     tracker: object = None
     t_submit: float = 0.0
     round_admitted: int = 0
+    cache_key: Optional[str] = None
+    cache_perm: Optional[tuple] = None
 
 
 # the per-request overridable knobs (subset of decide_kw keys)
@@ -267,6 +276,7 @@ class TwScheduler:
                  max_queue: Optional[int] = None, prio_weight: int = 4,
                  pipeline: int = 1, donate_ratio: Optional[float] = None,
                  heuristics: int = 0, seed: int = 0,
+                 cache=None,
                  verbose: bool = False, tracker=None):
         if schedule is None:
             schedule = "doubling" if backend == "pallas" else "while"
@@ -307,6 +317,14 @@ class TwScheduler:
         # own termination)
         self.heuristics = max(0, int(heuristics))
         self.seed = int(seed)
+        # content-addressed result cache (DESIGN.md §16): None = off
+        # (the library default — unit tests count dispatches), an int =
+        # entry bound for a fresh ``ResultCache``, or a caller-owned
+        # ``ResultCache`` shared across pools.  ``launch.twserved``
+        # defaults it ON for the serving process.
+        if isinstance(cache, int):
+            cache = ResultCache(cache) if cache > 0 else None
+        self.cache = cache
         self._heur_rounds: Dict[int, int] = {}
         self.done: Dict[int, object] = {}       # rid -> solver.SolveResult
         self.errors: Dict[int, str] = {}        # rid -> admission error
@@ -360,7 +378,8 @@ class TwScheduler:
                on_event: Optional[Callable[[dict], None]] = None,
                heuristics: Optional[int] = None,
                heuristic_only: bool = False,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               no_cache: bool = False) -> int:
         """Queue one solve request; returns its request id.
 
         ``heuristics`` budgets the anytime bounds-improver rounds the
@@ -380,7 +399,9 @@ class TwScheduler:
         across that many pool slots (must fit the pool: ``shards`` >
         ``lanes`` raises ``ValueError``).  ``priority`` picks the
         admission class,
-        ``deadline_s`` (seconds from now) arms anytime preemption.  When
+        ``deadline_s`` (seconds from now) arms anytime preemption.
+        ``no_cache=True`` bypasses the result cache in both directions
+        (no lookup, no insertion) when the pool has one.  When
         the admission queue is at ``max_queue`` the submit is rejected
         with ``slots.QueueFull`` carrying a ``retry_after`` hint — the
         backpressure contract.  A ``rid`` colliding with a previously
@@ -411,7 +432,8 @@ class TwScheduler:
                            heuristics=(None if heuristics is None
                                        else max(0, int(heuristics))),
                            heuristic_only=bool(heuristic_only),
-                           seed=None if seed is None else int(seed))
+                           seed=None if seed is None else int(seed),
+                           no_cache=bool(no_cache))
         kw = self._effective_kw(req)
         backend_lib.validate(kw["backend"], mode=kw["mode"],
                              schedule=kw["schedule"], use_mmw=kw["use_mmw"],
@@ -420,9 +442,25 @@ class TwScheduler:
                              shards=shards)
         if cap is not None:
             engine_lib.validate_geometry(cap, self.block)
+        # content-addressed cache key (DESIGN.md §16) — computed OUTSIDE
+        # the lock (canonical labeling is pure host work).  heuristic_only
+        # requests are excluded: their result depends on the improver
+        # round budget actually *consumed*, which is load-dependent.
+        ck = cperm = None
+        if self.cache is not None and not req.no_cache \
+                and not req.heuristic_only and g.n > 0:
+            ck, cperm = self._cache_key_for(req)
         with self._lock:
-            if self.pool.max_queue is not None and \
+            hit = None
+            if ck is not None:
+                hit = self.cache.lookup(ck, need_order=req.reconstruct)
+            if hit is None and self.pool.max_queue is not None and \
                     self.pool.qsize >= self.pool.max_queue:
+                # the lookup above already counted a cache miss; keep the
+                # telemetry reconciliation exact even though this request
+                # never gets a child scope
+                if ck is not None:
+                    self.tracker.count(cache_misses=1)
                 raise QueueFull(
                     f"admission queue full ({self.pool.qsize} queued, "
                     f"max_queue={self.pool.max_queue})",
@@ -439,7 +477,18 @@ class TwScheduler:
             req.tracker = self.tracker.child(f"req{rid}")
             req.t_submit = time.monotonic()
             self._prog[rid] = [0, max(0, g.n - 1), 0]
-            self.pool.submit(req, priority=req.priority)
+            if hit is not None:
+                # warm hit: the request never touches the queue, a lane,
+                # or the device — it is resolved right here at submit
+                self._serve_cached(req, hit, cperm)
+            else:
+                if ck is not None:
+                    req.cache_key, req.cache_perm = ck, cperm
+                    req.tracker.count(cache_misses=1)
+                self.pool.submit(req, priority=req.priority)
+        # deliver the synthesized hit events (admitted/bounds/done) now —
+        # a cached submit returns with the terminal event already sunk
+        self._flush_events()
         return rid
 
     def _retry_after(self) -> float:
@@ -470,6 +519,98 @@ class TwScheduler:
         if req.heuristic_only and n <= 0:
             n = DEFAULT_HEURISTIC_ROUNDS
         return n
+
+    # ------------------------------------------------------- result cache
+
+    def _cache_cfg(self, req: SolveRequest) -> dict:
+        """The *effective* solve config that determines the result bits
+        for one request — the config half of the content address.  Knobs
+        that provably do not change the result (shards, speculate,
+        pipeline, priority, deadline: all bit-identical or discarded-
+        uncounted paths, DESIGN.md §11–§13) are excluded so differently-
+        scheduled resubmissions still hit.  ``seed`` and the heuristics
+        budget are always included: ``plan_block`` threads the seed into
+        the greedy clique/bound heuristics even at ``heuristics=0``, so
+        two seeds can legitimately produce different ``per_k`` surfaces.
+        ``reconstruct`` is deliberately *not* keyed — the cache upgrades
+        entries toward the order-ful result instead (``lookup`` with
+        ``need_order`` misses on order-less entries)."""
+        cfg = dict(self._effective_kw(req))
+        cfg["cap"] = req.cap if req.cap is not None else self.cap
+        cfg["cap_max"] = self.cap_max
+        cfg["budget_bytes"] = self.budget_bytes
+        cfg["use_preprocess"] = self.use_preprocess
+        cfg.update(self.plan_kw)
+        cfg["start_k"] = req.start_k
+        cfg["heuristics"] = self._req_heuristics(req)
+        cfg["seed"] = self._req_seed(req)
+        return cfg
+
+    def _cache_key_for(self, req: SolveRequest) -> tuple:
+        """(digest, canonical perm) for one request.  ``mode="bloom"``
+        results are Monte-Carlo *label-dependent* (the filter hashes
+        state bitsets), so bloom keys address the as-submitted adjacency
+        (identity perm) — only bit-identical resubmissions hit; every
+        exact-dedup mode keys the canonical form, so any isomorphic
+        relabeling hits."""
+        cfg = self._cache_cfg(req)
+        return canon.cache_key(req.g, cfg,
+                               canonical=(cfg["mode"] != "bloom"))
+
+    def _serve_cached(self, req: SolveRequest, res, perm) -> None:
+        """Resolve one request from a cache hit, at submit time, under
+        the scheduler lock.  The synthesized event stream (``admitted``
+        flagged ``cached``, one ``bounds``, terminal ``done``) satisfies
+        every invariant of the live stream — same shape, same monotone
+        clamps, strictly increasing ``seq`` — so sinks cannot tell a hit
+        from an instant solve except by the flag.  The stored order is
+        canonical-space; it is translated back through the *hitting*
+        submission's perm, so a relabeled duplicate receives an order
+        valid for its own labels."""
+        rid = req.rid
+        if res.order is not None:
+            if req.reconstruct:
+                inv = [0] * len(perm)
+                for v, c in enumerate(perm):
+                    inv[c] = v
+                res = dataclasses.replace(
+                    res, order=[inv[c] for c in res.order])
+            else:
+                # a non-reconstruct submission must see the same surface
+                # as its own uncached solve: no order
+                res = dataclasses.replace(res, order=None)
+        self._emit(req, {"event": "admitted", "name": req.g.name,
+                         "round": self.rounds + 1, "cached": True})
+        req.round_admitted = self.rounds
+        req.tracker.timing("admission_s", time.monotonic() - req.t_submit)
+        req.tracker.count(cache_hits=1)
+        prog = self._prog[rid]
+        lb = max(prog[0], res.width if res.exact else res.lb)
+        ub = min(prog[1], res.width)
+        prog[0], prog[1] = lb, ub
+        self._emit(req, {"event": "bounds", "lb": lb, "ub": ub,
+                         "cached": True})
+        self.done[rid] = res
+        self.terminal[rid] = "done"
+        self.tracker.count(reqs_done=1)
+        snap = self._close_request(req)
+        prog = self._prog.pop(rid)
+        self._emit(req, {"event": "done", "width": res.width,
+                         "exact": res.exact, "lb": lb, "ub": res.width,
+                         "expanded": res.expanded, "rounds": self.rounds,
+                         "cached": True, "metrics": snap},
+                   prog=prog)
+        if self.verbose:
+            print(f"[twserve] req {rid} ({req.g.name}): cache hit, "
+                  f"width={res.width} exact={res.exact}", flush=True)
+
+    def cache_stats(self) -> dict:
+        """Result-cache counters (``enabled: False`` when the pool runs
+        without one); the front end's ``cache_stats`` wire op returns
+        exactly this dict."""
+        if self.cache is None:
+            return {"enabled": False}
+        return dict(self.cache.stats(), enabled=True)
 
     def _group_key(self, req: SolveRequest) -> tuple:
         """Requests share a vmapped program iff this key matches: the
@@ -559,6 +700,21 @@ class TwScheduler:
         self.done[req.rid] = r
         self.terminal[req.rid] = "done"
         self.tracker.count(reqs_done=1)
+        # the ONE cache-insertion point (DESIGN.md §16): only a clean
+        # ``done`` populates the cache — cancel, deadline and error take
+        # different terminal paths and never reach here.  ``cache_key``
+        # was stamped at submit iff this request is cacheable.
+        if self.cache is not None and req.cache_key is not None:
+            store = r
+            if r.order is not None and req.cache_perm:
+                # store the order in canonical label space, so the entry
+                # serves every isomorphic relabeling of this graph
+                store = dataclasses.replace(
+                    r, order=[req.cache_perm[v] for v in r.order])
+            evicted = self.cache.insert(req.cache_key, store)
+            self.tracker.count(cache_insertions=1)
+            if evicted:
+                self.tracker.count(cache_evictions=evicted)
         snap = self._close_request(req)
         prog = self._prog.pop(req.rid, [0, max(0, req.g.n - 1), 0])
         lb = max(prog[0], r.width if r.exact else r.lb)

@@ -1,0 +1,7 @@
+"""``python -m repro.workload`` — the trace-generator CLI."""
+import sys
+
+from .generator import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Canonical-labeling + cache-key properties (DESIGN.md §16).
+
+The result cache is only sound if the canonical key is a *complete*
+isomorphism invariant: equal for every relabeling, distinct for every
+non-isomorphic pair, and stable across processes.  These tests pin each
+leg — including the Shrikhande-vs-rook pair that 1-WL refinement alone
+cannot separate (the individualization search must)."""
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import canon, graph
+
+
+def _shuffled(g, seed):
+    rng = np.random.RandomState(seed)
+    return g.relabel(rng.permutation(g.n))
+
+
+# ------------------------------------------------------ canonical form
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_canonical_form_perm_invariant(seed):
+    """Every relabeling of a random graph canonicalizes to the same
+    bytes, and the returned perm really maps onto the canonical graph."""
+    rng = random.Random(seed)
+    n = rng.randint(2, 14)
+    g = graph.gnp(n, rng.choice([0.2, 0.4, 0.6]), seed=seed)
+    b0, p0 = canon.canonical_form(g)
+    cg = g.relabel(np.array(p0))
+    assert canon._canon_bytes(n, canon._adj_masks(cg),
+                              list(range(n))) == b0
+    for k in range(3):
+        b1, p1 = canon.canonical_form(_shuffled(g, seed * 7 + k))
+        assert b1 == b0
+
+
+@pytest.mark.parametrize("name", ["petersen", "myciel3", "desargues",
+                                  "queen5_5", "grid6x6"])
+def test_named_instances_perm_invariant(name):
+    g = graph.REGISTRY[name]()
+    b0, _ = canon.canonical_form(g)
+    for k in range(2):
+        b1, _ = canon.canonical_form(_shuffled(g, 100 + k))
+        assert b1 == b0
+
+
+def test_perm_reconstructs_adjacency():
+    """canonical bytes pack exactly the relabeled adjacency, row v =
+    bitset over canonical columns (little-endian)."""
+    g = graph.petersen()
+    b, perm = canon.canonical_form(g)
+    cg = g.relabel(np.array(perm))
+    row_bytes = (g.n + 7) // 8
+    for i in range(g.n):
+        row = int.from_bytes(b[i * row_bytes:(i + 1) * row_bytes],
+                             "little")
+        mask = sum(1 << j for j in np.nonzero(cg.adj[i])[0])
+        assert row == mask
+
+
+def _cyc_edges(n, off=0):
+    return [(off + i, off + (i + 1) % n) for i in range(n)]
+
+
+def test_non_iso_same_degree_sequence():
+    """C6 vs 2xC3: identical degree sequence (all-2), different graphs —
+    the key must separate them."""
+    c6 = graph.from_edges(6, _cyc_edges(6), "C6")
+    c33 = graph.from_edges(6, _cyc_edges(3) + _cyc_edges(3, 3), "2C3")
+    assert canon.canonical_form(c6)[0] != canon.canonical_form(c33)[0]
+    assert canon.graph_key(c6) != canon.graph_key(c33)
+
+
+def _rook4x4():
+    """4x4 rook's graph: (a,b)~(c,d) iff same row or same column."""
+    def vid(a, b):
+        return 4 * a + b
+    edges = []
+    for a in range(4):
+        for b in range(4):
+            for c in range(4):
+                for d in range(4):
+                    if (a, b) < (c, d) and (a == c or b == d):
+                        edges.append((vid(a, b), vid(c, d)))
+    return graph.from_edges(16, edges, "rook4x4")
+
+
+def _shrikhande():
+    """Shrikhande graph on Z4 x Z4: (a,b)~(c,d) iff the difference is in
+    {±(1,0), ±(0,1), ±(1,1)}.  Same SRG(16,6,2,2) parameters as the 4x4
+    rook's graph but NOT isomorphic — 1-WL cannot tell them apart, the
+    individualization search must."""
+    def vid(a, b):
+        return 4 * a + b
+    diffs = {(1, 0), (3, 0), (0, 1), (0, 3), (1, 1), (3, 3)}
+    edges = []
+    for a in range(4):
+        for b in range(4):
+            for c in range(4):
+                for d in range(4):
+                    if vid(a, b) < vid(c, d) and \
+                            ((a - c) % 4, (b - d) % 4) in diffs:
+                        edges.append((vid(a, b), vid(c, d)))
+    return graph.from_edges(16, edges, "shrikhande")
+
+
+def test_non_iso_beyond_1wl():
+    """Shrikhande vs 4x4 rook: strongly regular with identical
+    parameters, so color refinement alone yields one color class for
+    both.  The full search still separates them."""
+    rook, shri = _rook4x4(), _shrikhande()
+    # same SRG parameters: both 6-regular on 16 vertices
+    assert sorted(rook.degrees()) == sorted(shri.degrees())
+    # 1-WL sees a single equitable class on each
+    for g in (rook, shri):
+        masks = canon._adj_masks(g)
+        assert len(set(canon._refine(g.n, masks, [0] * g.n))) == 1
+    assert canon.canonical_form(rook)[0] != canon.canonical_form(shri)[0]
+    # and each is still perm-invariant despite the huge automorphism group
+    assert canon.canonical_form(_shuffled(shri, 3))[0] == \
+        canon.canonical_form(shri)[0]
+
+
+def test_golden_n20_pairwise_distinct():
+    gs = [graph.grid(4, 5), graph.desargues(), graph.random_tree(20, 7)]
+    keys = [canon.graph_key(g) for g in gs]
+    assert len(set(keys)) == 3
+
+
+def test_empty_and_tiny():
+    b0, p0 = canon.canonical_form(graph.from_edges(0, [], "empty"))
+    assert b0 == b"" and p0 == ()
+    b1, p1 = canon.canonical_form(graph.from_edges(1, [], "one"))
+    assert p1 == (0,)
+
+
+# ------------------------------------------------------ cache keys
+
+def test_cache_key_canonical_vs_raw():
+    """canonical=True keys hit across relabelings; canonical=False
+    (bloom) keys are deliberately label-dependent."""
+    g = graph.petersen()
+    h = _shuffled(g, 5)
+    cfg = {"mode": "sort", "cap": 1 << 12}
+    assert canon.cache_key(g, cfg)[0] == canon.cache_key(h, cfg)[0]
+    kg = canon.cache_key(g, cfg, canonical=False)
+    kh = canon.cache_key(h, cfg, canonical=False)
+    assert kg[0] != kh[0]
+    assert kg[1] == tuple(range(g.n))        # identity perm for raw keys
+
+
+def test_cache_key_config_separation():
+    """Any one-knob change must address a different entry."""
+    g = graph.myciel(3)
+    base = {"mode": "sort", "cap": 1 << 12, "use_mmw": True, "seed": 0}
+    k0 = canon.cache_key(g, base)[0]
+    for knob, v in [("mode", "bloom"), ("cap", 1 << 13),
+                    ("use_mmw", False), ("seed", 1)]:
+        assert canon.cache_key(g, dict(base, **{knob: v}))[0] != k0
+    # graph-only key differs from config-carrying key domains
+    assert canon.graph_key(g) != k0
+
+
+def test_config_blob_order_independent():
+    a = canon.config_blob({"a": 1, "b": "x", "c": None})
+    b = canon.config_blob({"c": None, "b": "x", "a": 1})
+    assert a == b
+
+
+def test_render_value_rejects_non_primitives():
+    for bad in ({"a": 1}, object(), {1, 2}, b"bytes"):
+        with pytest.raises(TypeError):
+            canon.config_blob({"k": bad})
+
+
+def test_keys_stable_across_processes():
+    """Digests must not depend on PYTHONHASHSEED — run the key
+    computation in two subprocesses with different hash seeds."""
+    prog = ("from repro.core import canon, graph;"
+            "g = graph.petersen();"
+            "print(canon.graph_key(g));"
+            "print(canon.cache_key(g, {'mode': 'sort', 'cap': 4096})[0])")
+    outs = []
+    for hs in ("0", "1"):
+        env = dict(os.environ, PYTHONHASHSEED=hs,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        r = subprocess.run([sys.executable, "-c", prog], env=env,
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))),
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    # and they match this process too
+    g = graph.petersen()
+    want = canon.graph_key(g) + "\n" + \
+        canon.cache_key(g, {"mode": "sort", "cap": 4096})[0] + "\n"
+    assert outs[0] == want

@@ -1,0 +1,135 @@
+"""DIMACS/PACE reader edge cases + write/read round-trip (ISSUE 10).
+
+``read_dimacs`` must survive what real instance files actually contain:
+comments and blank lines anywhere, mixed ``e u v`` / bare edge lines,
+node-weight lines, header-format variants, 0- vs 1-based numbering,
+self-loops, duplicate edges, and vertex indices past the header's
+``n``."""
+import random
+import tempfile
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph
+
+
+def _edge_set(g):
+    return {(u, v) for u in range(g.n) for v in range(u + 1, g.n)
+            if g.adj[u][v]}
+
+
+def _write(tmp_path, text, name="t.gr"):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+# ------------------------------------------------------------- round-trip
+
+@pytest.mark.parametrize("name", sorted(graph.REGISTRY))
+def test_registry_round_trip(name, tmp_path):
+    g = graph.REGISTRY[name]()
+    p = str(tmp_path / f"{name}.gr")
+    graph.write_dimacs(g, p)
+    back = graph.read_dimacs(p)
+    assert back.n == g.n
+    assert _edge_set(back) == _edge_set(g)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_gnp_round_trip(seed):
+    rng = random.Random(seed)
+    g = graph.gnp(rng.randint(1, 24), rng.choice([0.1, 0.3, 0.6]),
+                  seed=seed)
+    with tempfile.TemporaryDirectory() as d:
+        p = f"{d}/g.gr"
+        graph.write_dimacs(g, p)
+        back = graph.read_dimacs(p)
+    assert back.n == g.n and _edge_set(back) == _edge_set(g)
+
+
+# ------------------------------------------------------- reader tolerance
+
+def test_comments_and_blanks_anywhere(tmp_path):
+    p = _write(tmp_path, "c header comment\n"
+                         "\n"
+                         "p tw 4 3\n"
+                         "1 2\n"
+                         "c mid-file comment\n"
+                         "% percent comment\n"
+                         "\n"
+                         "2 3\n"
+                         "3 4\n"
+                         "c trailing\n")
+    g = graph.read_dimacs(p)
+    assert g.n == 4 and _edge_set(g) == {(0, 1), (1, 2), (2, 3)}
+
+
+def test_mixed_e_and_bare_edge_lines_with_node_weights(tmp_path):
+    p = _write(tmp_path, "p edge 4 3\n"
+                         "n 1 10\n"
+                         "e 1 2\n"
+                         "3 4\n"
+                         "e 2 3\n")
+    g = graph.read_dimacs(p)
+    assert g.n == 4 and _edge_set(g) == {(0, 1), (1, 2), (2, 3)}
+
+
+def test_self_loops_dropped_duplicates_collapse(tmp_path):
+    p = _write(tmp_path, "p tw 3 5\n"
+                         "1 1\n"
+                         "1 2\n"
+                         "2 1\n"
+                         "1 2\n"
+                         "2 3\n")
+    g = graph.read_dimacs(p)
+    assert g.n == 3 and _edge_set(g) == {(0, 1), (1, 2)}
+
+
+def test_zero_based_file_is_not_shifted(tmp_path):
+    p = _write(tmp_path, "p tw 3 2\n0 1\n1 2\n")
+    g = graph.read_dimacs(p)
+    assert _edge_set(g) == {(0, 1), (1, 2)}
+
+
+def test_one_based_file_shifts_down(tmp_path):
+    p = _write(tmp_path, "p tw 3 2\n1 2\n2 3\n")
+    g = graph.read_dimacs(p)
+    assert _edge_set(g) == {(0, 1), (1, 2)}
+
+
+def test_indices_past_header_grow_the_graph(tmp_path):
+    p = _write(tmp_path, "p tw 2 2\n1 2\n2 5\n")
+    g = graph.read_dimacs(p)
+    assert g.n == 5 and _edge_set(g) == {(0, 1), (1, 4)}
+
+
+def test_header_without_n_uses_edge_span(tmp_path):
+    p = _write(tmp_path, "1 2\n2 3\n3 4\n")     # headerless PACE-ish
+    g = graph.read_dimacs(p)
+    assert g.n == 4 and len(_edge_set(g)) == 3
+
+
+@pytest.mark.parametrize("header", ["p tw 3 1", "p edge 3 1", "p 3 1"])
+def test_header_format_variants(header, tmp_path):
+    g = graph.read_dimacs(_write(tmp_path, f"{header}\n1 2\n"))
+    assert g.n == 3 and _edge_set(g) == {(0, 1)}
+
+
+def test_isolated_vertices_survive_via_header_n(tmp_path):
+    g = graph.read_dimacs(_write(tmp_path, "p tw 6 1\n1 2\n"))
+    assert g.n == 6 and g.n_edges == 1
+
+
+def test_malformed_header_and_negative_index_raise(tmp_path):
+    with pytest.raises(ValueError, match="malformed p header"):
+        graph.read_dimacs(_write(tmp_path, "p tw n m\n1 2\n"))
+    with pytest.raises(ValueError, match="negative"):
+        graph.read_dimacs(_write(tmp_path, "p tw 3 1\n-1 2\n"))
+
+
+def test_empty_file_reads_as_empty_graph(tmp_path):
+    g = graph.read_dimacs(_write(tmp_path, "c nothing here\n\n"))
+    assert g.n == 0 and g.n_edges == 0

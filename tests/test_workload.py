@@ -1,0 +1,216 @@
+"""Workload generator: spec validation, trace determinism, the
+duplicate/iso dials, and the generated-trace → serve_load replay path
+(ISSUE 10 / DESIGN.md §16).
+
+The generator's contract is *experiment-grade reproducibility*: a trace
+is a pure function of its spec (same spec + seed → byte-identical
+arrivals, in any process), every bad spec fails loudly at parse time,
+and the duplicate provenance it records (``dup_of``/``iso``) is exactly
+what the cache benchmarks key their assertions on."""
+import dataclasses
+import json
+import os
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import canon, graph
+from repro.workload import (Arrival, SpecError, SweepSpec, generate,
+                            quick_spec, read_trace, write_trace)
+
+# benchmarks/ is a repo-root namespace package (not on the src path the
+# test runner installs) — the replay end of the pipeline lives there
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _dump(arrivals):
+    return json.dumps([a.to_json() for a in arrivals], sort_keys=True)
+
+
+# ------------------------------------------------------------ validation
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda d: d.update(bogus=1), "unknown spec field"),
+    (lambda d: d.update(seed="x"), "seed must be an int"),
+    (lambda d: d.update(requests=0), "requests must be an int >= 1"),
+    (lambda d: d.update(arrival={"kind": "burst"}), "arrival.kind"),
+    (lambda d: d.update(arrival={"kind": "poisson", "rate_hz": 0}),
+     "rate_hz"),
+    (lambda d: d.update(duplicate_rate=1.5), "duplicate_rate"),
+    (lambda d: d.update(iso_rate=-0.1), "iso_rate"),
+    (lambda d: d.update(sweep={"nodes": [8]}), "both nodes and p"),
+    (lambda d: d.update(sweep={"nodes": [0], "p": [0.5]}),
+     "nodes entries"),
+    (lambda d: d.update(sweep={"nodes": [8], "p": [1.5]}), "p entries"),
+    (lambda d: d.update(named={"names": ["not_a_graph"]}),
+     "not in graph.REGISTRY"),
+    (lambda d: d.update(knobs={"warp_speed": True}), "unknown knob"),
+    (lambda d: d.update(knobs={"mode": []}), "empty choice list"),
+])
+def test_bad_specs_fail_at_parse_time(mutate, match):
+    d = {"seed": 1, "requests": 4,
+         "sweep": {"nodes": [8], "p": [0.5], "reps": 1}}
+    mutate(d)
+    with pytest.raises(SpecError, match=match):
+        SweepSpec.parse(d)
+
+
+def test_empty_spec_generates_nothing_and_says_so():
+    with pytest.raises(SpecError, match="no instances"):
+        SweepSpec.parse({"seed": 0})
+
+
+def test_defaults_fill_in():
+    spec = SweepSpec.parse({"named": {"names": ["petersen"], "reps": 3}})
+    assert spec.requests == 3 and spec.arrival_kind == "uniform"
+    assert spec.duplicate_rate == 0.0
+
+
+# ----------------------------------------------------------- determinism
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_trace_is_a_pure_function_of_the_spec(seed):
+    spec = quick_spec(duplicate_rate=0.4, iso_rate=0.5, requests=12,
+                      seed=seed)
+    a, b = generate(spec), generate(spec)
+    assert _dump(a) == _dump(b)
+    other = generate(quick_spec(duplicate_rate=0.4, iso_rate=0.5,
+                                requests=12, seed=seed + 1))
+    assert _dump(a) != _dump(other)
+
+
+def test_arrival_offsets_monotone_for_both_kinds():
+    for arrival in ({"kind": "uniform", "gap_s": 0.01},
+                    {"kind": "poisson", "rate_hz": 100.0}):
+        spec = SweepSpec.parse({"seed": 3, "requests": 20,
+                                "arrival": arrival,
+                                "sweep": {"nodes": [8], "p": [0.3],
+                                          "reps": 2}})
+        ts = [a.t for a in generate(spec)]
+        assert ts[0] == 0.0
+        assert all(x <= y for x, y in zip(ts, ts[1:]))
+
+
+def test_knob_draws_are_deterministic_and_in_range():
+    spec = SweepSpec.parse({
+        "seed": 5, "requests": 24,
+        "named": {"names": ["petersen"], "reps": 1},
+        "duplicate_rate": 0.3,
+        "knobs": {"mode": ["sort", "bloom"], "reconstruct": False,
+                  "seed": [0, 1, 2]}})
+    a, b = generate(spec), generate(spec)
+    assert _dump(a) == _dump(b)
+    for arr in a:
+        assert arr.knobs["mode"] in ("sort", "bloom")
+        assert arr.knobs["reconstruct"] is False
+        assert arr.knobs["seed"] in (0, 1, 2)
+        if arr.dup_of is not None:      # duplicates replay root knobs
+            assert arr.knobs == a[arr.dup_of].knobs
+
+
+# ------------------------------------------------------ the two dials
+
+def test_duplicate_dial_extremes():
+    z = generate(quick_spec(duplicate_rate=0.0, requests=12, seed=2))
+    assert all(a.dup_of is None for a in z)
+    spec = SweepSpec.parse({"seed": 2, "requests": 12,
+                            "named": {"names": ["petersen"]},
+                            "duplicate_rate": 1.0})
+    full = generate(spec)
+    assert full[0].dup_of is None
+    assert all(a.dup_of == 0 for a in full[1:])
+
+
+def test_duplicates_reference_fresh_roots_with_identical_graphs():
+    arrivals = generate(quick_spec(duplicate_rate=0.6, iso_rate=0.0,
+                                   requests=24, seed=7))
+    dups = [a for a in arrivals if a.dup_of is not None]
+    assert dups
+    for a in dups:
+        root = arrivals[a.dup_of]
+        assert root.dup_of is None and root.idx < a.idx
+        assert not a.iso
+        assert (a.n, a.edges) == (root.n, root.edges)
+
+
+def test_iso_duplicates_are_isomorphic_but_byte_different():
+    arrivals = generate(quick_spec(duplicate_rate=0.8, iso_rate=1.0,
+                                   requests=24, seed=1))
+    isos = [a for a in arrivals if a.iso]
+    assert isos
+    for a in isos:
+        root = arrivals[a.dup_of]
+        assert a.name.endswith("_iso") and a.n == root.n
+        assert canon.graph_key(a.graph()) == canon.graph_key(root.graph())
+    # at least one relabeling actually moved edges (n! >> 1 here)
+    assert any(sorted(map(tuple, a.edges)) !=
+               sorted(map(tuple, arrivals[a.dup_of].edges)) for a in isos)
+
+
+def test_fresh_slots_recycle_the_base_pool():
+    spec = SweepSpec.parse({"seed": 0, "requests": 7,
+                            "named": {"names": ["petersen", "myciel3"]}})
+    arrivals = generate(spec)
+    assert all(a.dup_of is None for a in arrivals)
+    names = sorted(a.name for a in arrivals)
+    assert names.count("petersen") + names.count("myciel3") == 7
+
+
+# --------------------------------------------------------------- traces
+
+def test_trace_round_trip(tmp_path):
+    spec = quick_spec(duplicate_rate=0.5, iso_rate=0.5, requests=10,
+                      seed=4)
+    arrivals = generate(spec)
+    p = str(tmp_path / "t.jsonl")
+    write_trace(p, arrivals, spec)
+    back = read_trace(p)
+    assert _dump(back) == _dump(arrivals)
+    with open(p) as f:
+        meta = json.loads(f.readline())["meta"]
+    assert meta["arrivals"] == len(arrivals)
+    # tuples come back as JSON lists; compare through one json pass
+    want = json.loads(json.dumps(dataclasses.asdict(spec)))
+    assert meta["spec"] == want
+
+
+def test_trace_without_meta_line_still_replays(tmp_path):
+    a = Arrival(idx=0, t=0.0, name="hand", n=3,
+                edges=[[0, 1], [1, 2]])
+    p = str(tmp_path / "bare.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps(a.to_json()) + "\n\n")
+    back = read_trace(p)
+    assert len(back) == 1 and back[0].graph().n_edges == 2
+
+
+def test_cli_generates_a_replayable_trace(tmp_path):
+    from repro.workload import generator
+    out = str(tmp_path / "cli.jsonl")
+    rc = generator.main(["--quick", "--requests", "8",
+                         "--duplicate-rate", "0.5", "--seed", "3",
+                         "--out", out])
+    assert rc == 0
+    back = read_trace(out)
+    assert len(back) == 8
+    assert rc == 0 and generator.main(
+        ["--quick", "--requests", "0", "--out", out]) == 2  # bad spec
+
+
+# ------------------------------------------------- end-to-end fast tier
+
+def test_generated_trace_drives_serve_load():
+    """The CI smoke in miniature: a quick-spec trace replayed closed-loop
+    through the real server with the cache on — every duplicate hits
+    (zero-dispatch asserted inside run_trace) and parity holds."""
+    from benchmarks.serve_load import run_trace
+    arrivals = generate(quick_spec(duplicate_rate=0.5, iso_rate=0.25,
+                                   requests=10, seed=6))
+    out = run_trace(arrivals, lanes=2, block=32, cache=16, closed=True)
+    assert out["n"] == 10
+    dups = {a.idx for a in arrivals if a.dup_of is not None}
+    assert dups <= set(out["hit_idxs"])
+    assert out["cache_stats"]["hits"] == len(out["hit_idxs"])
